@@ -1,0 +1,69 @@
+"""One benchmark per paper artifact (Figs. 3-7) — each returns CSV rows and
+a wall-time per evaluation (the analytical models are vectorized closed
+forms, so the timing quantifies the sweep engine itself)."""
+
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from repro.core.sweep import (fig3_engn_movement, fig4_hygcn_movement,
+                              fig5_iterations_vs_bandwidth,
+                              fig6_fitting_factor, fig7_systolic_reuse)
+
+
+def _timed(fn, *args, repeats: int = 20, **kw):
+    fn(*args, **kw)  # warm
+    t0 = time.perf_counter()
+    for _ in range(repeats):
+        res = fn(*args, **kw)
+    dt = (time.perf_counter() - t0) / repeats
+    return res, dt * 1e6
+
+
+def fig3() -> list[dict]:
+    res, us = _timed(fig3_engn_movement)
+    rows = res.rows()
+    for r in rows:
+        r.update(figure="fig3_engn_movement", us_per_call=us)
+    return rows
+
+
+def fig4() -> list[dict]:
+    res, us = _timed(fig4_hygcn_movement)
+    rows = res.rows()
+    for r in rows:
+        r.update(figure="fig4_hygcn_movement", us_per_call=us)
+    return rows
+
+
+def fig5() -> list[dict]:
+    out = []
+    for accel in ("engn", "hygcn"):
+        res, us = _timed(fig5_iterations_vs_bandwidth, accel)
+        for r in res.rows():
+            r.update(figure=f"fig5_{accel}", us_per_call=us)
+            out.append(r)
+    return out
+
+
+def fig6() -> list[dict]:
+    res, us = _timed(fig6_fitting_factor)
+    ff = np.asarray(res.meta["fitting_factor"])
+    rows = res.rows()
+    for r, f in zip(rows, ff):
+        r.update(figure="fig6_fitting_factor", fitting_factor=float(f),
+                 us_per_call=us)
+    return rows
+
+
+def fig7() -> list[dict]:
+    res, us = _timed(fig7_systolic_reuse)
+    rows = res.rows()
+    for r in rows:
+        r.update(figure="fig7_systolic_reuse", us_per_call=us)
+    return rows
+
+
+ALL = (fig3, fig4, fig5, fig6, fig7)

@@ -1,0 +1,59 @@
+"""Benchmark harness entry point: ``PYTHONPATH=src python -m benchmarks.run``.
+
+Prints one CSV per paper table/figure (name,us_per_call,derived columns)
+followed by the §Roofline table derived from the dry-run artifacts (if
+present).  Use ``--figure figN`` / ``--skip-roofline`` to subset.
+"""
+
+from __future__ import annotations
+
+import argparse
+import csv
+import io
+
+
+def _print_csv(name: str, rows: list[dict]) -> None:
+    if not rows:
+        print(f"# {name}: no rows")
+        return
+    cols = sorted({k for r in rows for k in r})
+    buf = io.StringIO()
+    w = csv.DictWriter(buf, fieldnames=cols)
+    w.writeheader()
+    for r in rows:
+        w.writerow(r)
+    print(f"# ==== {name} ({len(rows)} rows) ====")
+    print(buf.getvalue())
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--figure", default=None,
+                    help="only this figure (fig3..fig7)")
+    ap.add_argument("--skip-roofline", action="store_true")
+    args = ap.parse_args()
+
+    from . import paper_figures
+
+    for fn in paper_figures.ALL:
+        if args.figure and fn.__name__ != args.figure:
+            continue
+        _print_csv(fn.__name__, fn())
+
+    if not args.skip_roofline and not args.figure:
+        from . import roofline
+        try:
+            table_rows = roofline.rows("single")
+        except FileNotFoundError:
+            table_rows = []
+        if table_rows:
+            _print_csv("roofline_single_pod", table_rows)
+            print("# roofline table (human-readable):")
+            print(roofline.render_table())
+        else:
+            print("# roofline: no dry-run artifacts "
+                  "(run PYTHONPATH=src python -m repro.launch.dryrun)")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,62 @@
+"""Comparative accelerator study (the paper's Sec. IV narrative, end to end):
+EnGN vs HyGCN across tile sizes, bandwidths, and reuse factors, plus the
+TPU-pod reading of the same graph workloads.
+
+    PYTHONPATH=src python examples/accelerator_comparison.py
+"""
+
+import numpy as np
+
+from repro.core import (EnGNHardwareParams, EnGNModel, HyGCNHardwareParams,
+                        HyGCNModel, paper_default_graph)
+from repro.core.sweep import fig5_iterations_vs_bandwidth, fig7_systolic_reuse
+from repro.core.tpu_model import ring_spmm_traffic, spmm_feature_allgather
+
+
+def main() -> None:
+    engn, hygcn = EnGNModel(), HyGCNModel()
+
+    print("tile size sweep (defaults: N=30, T=5, B=1000, sigma=4, P=10K)")
+    print(f"{'K':>7} {'EnGN off-chip':>14} {'HyGCN off-chip':>15} "
+          f"{'EnGN on-array':>14} {'HyGCN on-array':>15}")
+    for k in (256, 1024, 4096, 16384):
+        g = paper_default_graph(float(k))
+        eo = engn.evaluate(g)
+        ho = hygcn.evaluate(g)
+        print(f"{k:>7} {float(eo.offchip_bits()):>14.3e} "
+              f"{float(ho.offchip_bits()):>15.3e} "
+              f"{float(eo.onchip_bits()):>14.3e} "
+              f"{float(ho.onchip_bits()):>15.3e}")
+    print("-> (i) aggregation dominates; (ii) HyGCN's inter-phase buffer "
+          "costs it off-chip traffic; both scale linearly in K.\n")
+
+    print("bandwidth saturation (total iterations), K=1024:")
+    for accel in ("engn", "hygcn"):
+        res = fig5_iterations_vs_bandwidth(accel, K=np.array([1024.0]))
+        iters = res.total_iterations[:, 0]
+        B = res.axes["B"]
+        knee = B[np.argmax(iters <= 1.05 * iters.min())]
+        print(f"  {accel:6}: saturates at B ~ {knee:.0f} bits/iter "
+              f"(floor {iters.min():.0f} iterations)")
+    print()
+
+    print("HyGCN systolic reuse (Fig. 7): loadweights bits at N=30:")
+    res = fig7_systolic_reuse(gamma=np.array([0.0, 0.5, 0.9, 0.99]))
+    lw = res.data_bits["loadweights"][:, 0]
+    for gamma, bits in zip(res.axes["gamma"], lw):
+        print(f"  Gamma={gamma:.2f}: {bits:>12.4g} bits")
+    print()
+
+    print("TPU-pod reading of the same question (our extension): moving")
+    print("ogb_products features for one GCN layer on 256 chips —")
+    ag = spmm_feature_allgather(2_449_408, 100, 256, dtype_bytes=4)
+    ring = ring_spmm_traffic(2_449_408, 100, 256, dtype_bytes=4)
+    print(f"  baseline all-gather : {ag.total('ici'):.4g} B/chip "
+          f"(features materialized on every chip)")
+    print(f"  RER ring (EnGN-style): {ring.total('ici'):.4g} B/chip, "
+          f"same volume but shard-resident + hop-overlapped — the paper's")
+    print("  'RER keeps the big movement on the fast fabric' lesson at pod scale.")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,30 @@
+"""End-to-end GCN training on a synthetic Cora-like graph: a few hundred
+steps with checkpointing, fault injection at step 120, and recovery —
+demonstrating the full substrate on CPU.
+
+    PYTHONPATH=src python examples/train_gcn.py
+"""
+
+import logging
+
+from repro.launch.train import build_parser, run
+
+
+def main() -> None:
+    logging.basicConfig(level=logging.INFO, format="%(name)s %(message)s")
+    args = build_parser().parse_args([
+        "--arch", "gcn-cora", "--steps", "300", "--lr", "5e-3",
+        "--gnn-nodes", "512", "--gnn-edges", "2048",
+        "--checkpoint-every", "50", "--fail-at", "120",
+    ])
+    history = run(args)
+    first = next(h for h in history if "loss" in h)
+    last = history[-1]
+    print(f"\nGCN full-batch training: loss {first['loss']:.4f} -> "
+          f"{last['loss']:.4f}, acc {last.get('acc', float('nan')):.3f} "
+          f"({len(history)} recorded steps, 1 injected failure recovered)")
+    assert last["loss"] < first["loss"]
+
+
+if __name__ == "__main__":
+    main()

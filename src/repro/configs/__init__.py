@@ -1,0 +1,39 @@
+"""Architecture registry: ``get_arch(name)`` / ``all_archs()``."""
+
+from . import (arctic_480b, dlrm_mlperf, equiformer_v2, gatedgcn, gcn_cora,
+               gemma2_2b, granite_3_2b, meshgraphnet, qwen3_moe_30b_a3b,
+               smollm_135m)
+from .base import ArchDef, GNN_SHAPES, LM_SHAPES, RECSYS_SHAPES, ShapeSpec
+
+_MODULES = (qwen3_moe_30b_a3b, arctic_480b, granite_3_2b, gemma2_2b,
+            smollm_135m, gcn_cora, equiformer_v2, meshgraphnet, gatedgcn,
+            dlrm_mlperf)
+
+REGISTRY: dict[str, ArchDef] = {m.ARCH.name: m.ARCH for m in _MODULES}
+
+
+def get_arch(name: str) -> ArchDef:
+    if name not in REGISTRY:
+        raise KeyError(f"unknown arch {name!r}; available: {sorted(REGISTRY)}")
+    return REGISTRY[name]
+
+
+def all_archs() -> list[ArchDef]:
+    return list(REGISTRY.values())
+
+
+def all_cells(*, include_skipped: bool = False) -> list[tuple[str, str, str]]:
+    """(arch, shape, status) for the 40-cell grid."""
+    out = []
+    for arch in all_archs():
+        for shape in arch.shapes:
+            if shape in arch.skips:
+                if include_skipped:
+                    out.append((arch.name, shape, f"SKIP: {arch.skips[shape]}"))
+            else:
+                out.append((arch.name, shape, "run"))
+    return out
+
+
+__all__ = ["REGISTRY", "get_arch", "all_archs", "all_cells", "ArchDef",
+           "ShapeSpec", "LM_SHAPES", "GNN_SHAPES", "RECSYS_SHAPES"]

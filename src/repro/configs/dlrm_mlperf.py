@@ -1,0 +1,25 @@
+"""DLRM MLPerf [arXiv:1906.00091]: 13 dense + 26 sparse (Criteo-1TB vocabs),
+embed dim 128, bottom MLP 512-256-128, top MLP 1024-1024-512-256-1, dot
+interaction."""
+
+from ..models.dlrm import CRITEO_1TB_VOCABS, DLRMConfig
+from .base import ArchDef, RECSYS_SHAPES
+
+
+def make_config(**kw) -> DLRMConfig:
+    return DLRMConfig(name="dlrm-mlperf", **kw)
+
+
+def make_smoke_config(**kw) -> DLRMConfig:
+    return DLRMConfig(
+        name="dlrm-smoke", n_dense=13, n_sparse=26, embed_dim=16,
+        vocab_sizes=tuple(min(v, 128) for v in CRITEO_1TB_VOCABS),
+        bot_mlp=(32, 16), top_mlp=(64, 32, 1), **kw)
+
+
+ARCH = ArchDef(name="dlrm-mlperf", family="recsys",
+               make_config=make_config, make_smoke_config=make_smoke_config,
+               shapes=RECSYS_SHAPES,
+               notes="Tables row-sharded over the model axis (vocab-parallel "
+                     "lookup + psum baseline; all-to-all is the §Perf "
+                     "optimization).")

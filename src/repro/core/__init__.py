@@ -1,0 +1,39 @@
+"""Core contribution of the paper: analytical data-movement models.
+
+Public surface:
+
+* :class:`~repro.core.engn.EnGNModel` / :class:`~repro.core.hygcn.HyGCNModel`
+  — Tables III/IV as closed-form, broadcasting models.
+* :mod:`repro.core.sweep` — Figures 3-7 sweep engine.
+* :mod:`repro.core.tpu_model` — the methodology adapted to a TPU v5e pod
+  (three-term roofline + per-strategy analytical collective models).
+* :mod:`repro.core.validation` — analytical-vs-compiled-HLO validation.
+"""
+
+from .engn import EnGNModel
+from .hygcn import HyGCNModel
+from .notation import (EnGNHardwareParams, GraphTileParams,
+                       HyGCNHardwareParams, PAPER_DEFAULT_ENGN,
+                       PAPER_DEFAULT_GRAPH, PAPER_DEFAULT_HYGCN,
+                       paper_default_graph)
+from .terms import (AcceleratorModel, L1_CLASSES, L2_CLASSES, CACHE_CLASSES,
+                    ModelOutput, MovementTerm, tabulate)
+
+__all__ = [
+    "EnGNModel",
+    "HyGCNModel",
+    "GraphTileParams",
+    "EnGNHardwareParams",
+    "HyGCNHardwareParams",
+    "paper_default_graph",
+    "PAPER_DEFAULT_GRAPH",
+    "PAPER_DEFAULT_ENGN",
+    "PAPER_DEFAULT_HYGCN",
+    "AcceleratorModel",
+    "ModelOutput",
+    "MovementTerm",
+    "tabulate",
+    "L1_CLASSES",
+    "L2_CLASSES",
+    "CACHE_CLASSES",
+]

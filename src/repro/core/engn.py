@@ -1,0 +1,146 @@
+"""EnGN analytical data-movement model — Table III of the paper, verbatim.
+
+EnGN (Liang et al., IEEE TC 2020) processes aggregation and combination
+sequentially on a single M x M' PE array, with a ring-edge-reduce (RER)
+dataflow for aggregation and a dedicated cache (L2*) for high-degree
+vertices.  Each function below implements one row of Table III; the
+:class:`EnGNModel` assembles them into a :class:`~repro.core.terms.ModelOutput`.
+
+Faithfulness notes
+------------------
+* Every closed form matches Table III symbol-for-symbol.
+* ``aggregate`` contains the sub-expression ``ceil(K (N - M) / M)``: for
+  M >= N it would go negative (more PE rows than feature elements — the
+  second streaming pass never happens).  We clamp the inner numerator at 0,
+  which is the only reading that reproduces Fig. 3's reported non-monotone
+  behaviour of data movement in M (decreasing, then increasing).  Recorded in
+  DESIGN.md as an interpretation decision.
+* The paper's prose mentions an ``intertile`` step (loading the next tile)
+  that has no row in Table III; :meth:`EnGNModel.evaluate` can optionally
+  append it as a repeat of the vertex loads (``include_intertile=True``),
+  default off so totals match the published table.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+from .notation import EnGNHardwareParams, GraphTileParams
+from .terms import AcceleratorModel, ModelOutput, MovementTerm, ceil, minimum
+
+__all__ = ["EnGNModel"]
+
+
+def _f64(x) -> np.ndarray:
+    return np.asarray(x, dtype=np.float64)
+
+
+def loadvertcache(g: GraphTileParams, hw: EnGNHardwareParams) -> MovementTerm:
+    """Row 1: stream the L high-degree vertices from the dedicated cache."""
+    N, _, _, L, _ = g.astuple_f64()
+    s, Bs, M = _f64(hw.sigma), hw.b_star, _f64(hw.M)
+    iters = ceil(L * s / minimum(Bs, M * s))
+    bits = minimum(L * s, M * s, Bs) * N * iters
+    return MovementTerm("loadvertcache", "L2*-L1", bits, iters)
+
+
+def loadvertL2(g: GraphTileParams, hw: EnGNHardwareParams) -> MovementTerm:
+    """Row 2: stream the remaining K - L vertices from the L2 bank."""
+    N, _, K, L, _ = g.astuple_f64()
+    s, B, M = _f64(hw.sigma), _f64(hw.B), _f64(hw.M)
+    rem = np.maximum(K - L, 0.0)
+    iters = ceil(rem * s / minimum(B, M * s))
+    bits = minimum(rem * s, M * s, B) * N * iters
+    return MovementTerm("loadvertL2", "L2-L1", bits, iters)
+
+
+def loadedges(g: GraphTileParams, hw: EnGNHardwareParams) -> MovementTerm:
+    """Row 3: stream the tile's P edges."""
+    _, _, _, _, P = g.astuple_f64()
+    s, B = _f64(hw.sigma), _f64(hw.B)
+    iters = ceil(P * s / B)
+    bits = minimum(P * s, B) * iters
+    return MovementTerm("loadedges", "L2-L1", bits, iters)
+
+
+def loadweights(g: GraphTileParams, hw: EnGNHardwareParams) -> MovementTerm:
+    """Row 4: load the N x T combination weights, streamed by output column."""
+    N, T, _, _, _ = g.astuple_f64()
+    s, B, M = _f64(hw.sigma), _f64(hw.B), _f64(hw.M)
+    iters = ceil(T * s / minimum(B, M * s))
+    bits = minimum(T * s, M * s, B) * N * iters
+    return MovementTerm("loadweights", "L2-L1", bits, iters)
+
+
+def aggregate(g: GraphTileParams, hw: EnGNHardwareParams) -> MovementTerm:
+    """Row 5: ring-edge-reduce aggregation across the PE array (L1-L1).
+
+    Each of the ceil(K/M) vertex groups circulates partial sums around the
+    M-PE ring (M-1 hops of T outputs each); features beyond the first M
+    elements require extra streaming passes, ceil(K (N - M)+ / M).
+    """
+    N, T, K, _, _ = g.astuple_f64()
+    s, M = _f64(hw.sigma), _f64(hw.M)
+    passes = ceil(K / M) + ceil(K * np.maximum(N - M, 0.0) / M)
+    bits = M * (M - 1.0) * T * passes * s
+    return MovementTerm("aggregate", "L1-L1", bits, passes)
+
+
+def writecache(g: GraphTileParams, hw: EnGNHardwareParams) -> MovementTerm:
+    """Row 6: write high-degree vertex results back to the dedicated cache."""
+    _, T, _, L, _ = g.astuple_f64()
+    s, Bs, M = _f64(hw.sigma), hw.b_star, _f64(hw.M)
+    iters = ceil(L * s / minimum(M * s, Bs))
+    bits = minimum(M * s, L * s, Bs) * T * iters
+    return MovementTerm("writecache", "L1-L2*", bits, iters)
+
+
+def writeL2(g: GraphTileParams, hw: EnGNHardwareParams) -> MovementTerm:
+    """Row 7: write the remaining results to the L2 bank."""
+    _, T, K, L, _ = g.astuple_f64()
+    s, B, M = _f64(hw.sigma), _f64(hw.B), _f64(hw.M)
+    rem = np.maximum(K - L, 0.0)
+    iters = ceil(rem * s / minimum(M * s, B))
+    bits = minimum(M * s, rem * s, B) * T * iters
+    return MovementTerm("writeL2", "L1-L2", bits, iters)
+
+
+_ROWS = (loadvertcache, loadvertL2, loadedges, loadweights, aggregate,
+         writecache, writeL2)
+
+
+class EnGNModel(AcceleratorModel):
+    """Table III assembled: the EnGN per-tile data-movement model."""
+
+    name = "engn"
+
+    def evaluate(
+        self,
+        graph: GraphTileParams,
+        hw: EnGNHardwareParams | None = None,
+        *,
+        include_intertile: bool = False,
+    ) -> ModelOutput:
+        hw = hw or EnGNHardwareParams()
+        terms = [row(graph, hw) for row in _ROWS]
+        if include_intertile:
+            nxt_cache = loadvertcache(graph, hw)
+            nxt_l2 = loadvertL2(graph, hw)
+            terms.append(
+                MovementTerm(
+                    "intertile",
+                    "L2-L1",
+                    nxt_cache.data_bits + nxt_l2.data_bits,
+                    nxt_cache.iterations + nxt_l2.iterations,
+                )
+            )
+        return ModelOutput(
+            accelerator=self.name,
+            terms=tuple(terms),
+            meta={"hw": hw, "graph": graph, "include_intertile": include_intertile},
+        )
+
+    def fitting_factor(self, graph: GraphTileParams, hw: EnGNHardwareParams) -> np.ndarray:
+        """EnGN array-fitting factor K*N / M^2 studied in Fig. 6 (M = M')."""
+        N, _, K, _, _ = graph.astuple_f64()
+        return K * N / (_f64(hw.M) * _f64(hw.M_prime))

@@ -1,0 +1,157 @@
+"""Extract collective-traffic ground truth from compiled HLO text.
+
+``compiled.cost_analysis()`` reports FLOPs and HBM bytes but *not* collective
+traffic, so (per the brief) we parse the post-SPMD optimized HLO
+(``compiled.as_text()``) and account every
+
+    all-gather / all-reduce / reduce-scatter / all-to-all / collective-permute
+
+op.  For each op we record the **result-shape bytes** and derive **wire bytes
+per chip** using the ring-schedule algebra of :mod:`repro.core.tpu_model`
+(e.g. an all-gather over group size g receives (g-1)/g of its result).
+
+Async pairs (``all-gather-start`` / ``all-gather-done``) are counted once, on
+the ``-start`` op.  Tuple-shaped (variadic) collectives sum their components.
+"""
+
+from __future__ import annotations
+
+import re
+from dataclasses import dataclass, field
+from typing import Iterable, Mapping
+
+__all__ = ["CollectiveOp", "CollectiveStats", "parse_collectives",
+           "DTYPE_BYTES"]
+
+DTYPE_BYTES: dict[str, float] = {
+    "pred": 1, "s4": 0.5, "u4": 0.5, "s8": 1, "u8": 1, "s16": 2, "u16": 2,
+    "s32": 4, "u32": 4, "s64": 8, "u64": 8,
+    "f8e4m3fn": 1, "f8e5m2": 1, "f8e4m3": 1, "bf16": 2, "f16": 2,
+    "f32": 4, "f64": 8, "c64": 8, "c128": 16,
+}
+
+_COLLECTIVE_KINDS = (
+    "all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+    "collective-permute",
+)
+
+# e.g.  %ag = bf16[2,16,128]{2,1,0} all-gather(bf16[2,1,128]{2,1,0} %p), ...
+#       %ar = (f32[128]{0}, f32[64]{0}) all-reduce-start(...)
+_OP_RE = re.compile(
+    r"=\s*(?P<result>\([^)]*\)|[a-z0-9]+\[[0-9,]*\](?:\{[^}]*\})?)\s*"
+    r"(?P<kind>all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)"
+    r"(?P<suffix>-start|-done)?\s*\("
+)
+
+_SHAPE_RE = re.compile(r"(?P<dtype>[a-z][a-z0-9]*)\[(?P<dims>[0-9,]*)\]")
+
+_GROUPS_RE = re.compile(r"replica_groups=\{?\{([0-9, ]*)\}")
+_GROUPS_IOTA_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+_SRC_TGT_RE = re.compile(r"source_target_pairs=\{((?:\{\d+,\d+\},?)+)\}")
+
+
+def _shape_bytes(shape_text: str) -> float:
+    """Bytes of one shape literal or a tuple of them."""
+    total = 0.0
+    for m in _SHAPE_RE.finditer(shape_text):
+        dtype = m.group("dtype")
+        if dtype not in DTYPE_BYTES:
+            continue  # token types etc.
+        dims = m.group("dims")
+        n = 1
+        for d in dims.split(","):
+            if d.strip():
+                n *= int(d)
+        total += n * DTYPE_BYTES[dtype]
+    return total
+
+
+def _group_size(line: str) -> int:
+    """Participant count of the collective from its replica_groups attr."""
+    m = _GROUPS_IOTA_RE.search(line)
+    if m:  # iota form [num_groups,group_size]
+        return int(m.group(2))
+    m = _GROUPS_RE.search(line)
+    if m:
+        ids = [x for x in m.group(1).split(",") if x.strip()]
+        return max(len(ids), 1)
+    return 1
+
+
+@dataclass(frozen=True)
+class CollectiveOp:
+    kind: str
+    result_bytes: float
+    group_size: int
+    line_no: int
+
+    @property
+    def wire_bytes_per_chip(self) -> float:
+        g = self.group_size
+        s = self.result_bytes
+        if g <= 1 and self.kind != "collective-permute":
+            return 0.0
+        if self.kind == "all-gather":
+            return s * (g - 1) / g
+        if self.kind == "all-reduce":
+            return 2.0 * s * (g - 1) / g
+        if self.kind == "reduce-scatter":
+            return s * (g - 1)          # operand = result * g
+        if self.kind == "all-to-all":
+            return s * (g - 1) / g
+        if self.kind == "collective-permute":
+            return s
+        raise AssertionError(self.kind)
+
+
+@dataclass
+class CollectiveStats:
+    ops: list[CollectiveOp] = field(default_factory=list)
+
+    @property
+    def total_wire_bytes_per_chip(self) -> float:
+        return sum(op.wire_bytes_per_chip for op in self.ops)
+
+    @property
+    def total_result_bytes(self) -> float:
+        return sum(op.result_bytes for op in self.ops)
+
+    def by_kind(self) -> dict[str, float]:
+        out: dict[str, float] = {}
+        for op in self.ops:
+            out[op.kind] = out.get(op.kind, 0.0) + op.wire_bytes_per_chip
+        return out
+
+    def counts(self) -> dict[str, int]:
+        out: dict[str, int] = {}
+        for op in self.ops:
+            out[op.kind] = out.get(op.kind, 0) + 1
+        return out
+
+    def summary(self) -> dict[str, object]:
+        return {
+            "wire_bytes_per_chip": self.total_wire_bytes_per_chip,
+            "n_collectives": len(self.ops),
+            "by_kind": self.by_kind(),
+            "counts": self.counts(),
+        }
+
+
+def parse_collectives(hlo_text: str) -> CollectiveStats:
+    """Scan optimized HLO and account every collective once."""
+    stats = CollectiveStats()
+    for i, line in enumerate(hlo_text.splitlines()):
+        m = _OP_RE.search(line)
+        if not m:
+            continue
+        if m.group("suffix") == "-done":
+            continue  # paired with -start, already counted
+        kind = m.group("kind")
+        result_bytes = _shape_bytes(m.group("result"))
+        if result_bytes == 0.0:
+            continue
+        g = _group_size(line)
+        if kind == "collective-permute":
+            g = max(g, 2)
+        stats.ops.append(CollectiveOp(kind, result_bytes, g, i))
+    return stats

@@ -1,0 +1,124 @@
+"""HyGCN analytical data-movement model — Table IV of the paper, verbatim.
+
+HyGCN (Yan et al., HPCA 2020) pipelines two engines: an aggregation engine
+of Ma = 32 SIMD cores (each covering up to 8 feature components per step)
+and a combination engine — an 8 x 4 x 128 systolic array with weight reuse
+factor Gamma.  Intermediate (aggregated) features cross an inter-phase
+buffer, which is why HyGCN's off-chip-class movement exceeds EnGN's at
+matched parameters (Sec. IV-B).
+
+Each function implements one row of Table IV.  P_s (edges surviving HyGCN's
+window sliding) is modelled as ``Ps_ratio * P`` with the paper's default
+P_s ~ P (ratio 1).
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+from .notation import GraphTileParams, HyGCNHardwareParams
+from .terms import AcceleratorModel, ModelOutput, MovementTerm, ceil, minimum
+
+__all__ = ["HyGCNModel"]
+
+
+def _f64(x) -> np.ndarray:
+    return np.asarray(x, dtype=np.float64)
+
+
+def loadvertL2(g: GraphTileParams, hw: HyGCNHardwareParams) -> MovementTerm:
+    """Row 1: stream all K vertices of the tile into the aggregation engine."""
+    N, _, K, _, _ = g.astuple_f64()
+    s, B, Ma = _f64(hw.sigma), _f64(hw.B), _f64(hw.Ma)
+    iters = ceil(K * s / minimum(B, Ma * s))
+    bits = minimum(K * s, Ma * s, B) * N * iters
+    return MovementTerm("loadvertL2", "L2-L1", bits, iters)
+
+
+def loadedges(g: GraphTileParams, hw: HyGCNHardwareParams) -> MovementTerm:
+    """Row 2: stream the P_s window-slid edges."""
+    _, _, _, _, P = g.astuple_f64()
+    s, B = _f64(hw.sigma), _f64(hw.B)
+    Ps = hw.Ps(P)
+    iters = ceil(Ps * s / B)
+    bits = minimum(Ps * s, B) * iters
+    return MovementTerm("loadedges", "L2-L1", bits, iters)
+
+
+def loadweights(g: GraphTileParams, hw: HyGCNHardwareParams) -> MovementTerm:
+    """Row 3: load the (1 - Gamma) non-reused fraction of the N x T weights."""
+    N, T, _, _, _ = g.astuple_f64()
+    s, B, Mc = _f64(hw.sigma), _f64(hw.B), _f64(hw.Mc)
+    gamma = _f64(hw.gamma)
+    fresh = N * T * s * (1.0 - gamma)
+    iters = ceil(fresh / minimum(B, Mc * s))
+    bits = minimum(fresh, Mc * s, B) * iters
+    return MovementTerm("loadweights", "L2-L1", bits, iters)
+
+
+def aggregate(g: GraphTileParams, hw: HyGCNHardwareParams) -> MovementTerm:
+    """Row 4: SIMD aggregation — every core handles <= 8 feature components."""
+    N, _, _, _, P = g.astuple_f64()
+    s, Ma = _f64(hw.sigma), _f64(hw.Ma)
+    Ps = hw.Ps(P)
+    iters = ceil(N * Ps * s / (Ma * 8.0))
+    bits = minimum(N * Ps * s, Ma * 8.0) * iters
+    return MovementTerm("aggregate", "L1-L1", bits, iters)
+
+
+def writeinterphase(g: GraphTileParams, hw: HyGCNHardwareParams) -> MovementTerm:
+    """Row 5: spill aggregated K x N features to the inter-phase buffer."""
+    N, _, K, _, _ = g.astuple_f64()
+    s, B = _f64(hw.sigma), _f64(hw.B)
+    iters = ceil(K * N * s / B)
+    bits = minimum(K * N * s, B) * iters
+    return MovementTerm("writeinterphase", "L1-L2", bits, iters)
+
+
+def combine(g: GraphTileParams, hw: HyGCNHardwareParams) -> MovementTerm:
+    """Row 6: systolic matrix-vector combination (single on-array pass)."""
+    N, T, K, _, _ = g.astuple_f64()
+    s = _f64(hw.sigma)
+    bits = K * N * s + N * T * s
+    return MovementTerm("combine", "L1-L1", bits, np.ones_like(bits))
+
+
+def readinterphase(g: GraphTileParams, hw: HyGCNHardwareParams) -> MovementTerm:
+    """Row 7: the combination engine fetches aggregated features back."""
+    N, _, _, _, P = g.astuple_f64()
+    s, B, Mc = _f64(hw.sigma), _f64(hw.B), _f64(hw.Mc)
+    Ps = hw.Ps(P)
+    iters = ceil(Ps * N * s / minimum(B, Mc))
+    bits = minimum(Ps * N * s, B, Mc) * iters
+    return MovementTerm("readinterphase", "L2-L1", bits, iters)
+
+
+def writeL2(g: GraphTileParams, hw: HyGCNHardwareParams) -> MovementTerm:
+    """Row 8: write the K x T output features to the output buffer."""
+    _, T, K, _, _ = g.astuple_f64()
+    s, B = _f64(hw.sigma), _f64(hw.B)
+    iters = ceil(K * T * s / B)
+    bits = minimum(K * T * s, B) * iters
+    return MovementTerm("writeL2", "L1-L2", bits, iters)
+
+
+_ROWS = (loadvertL2, loadedges, loadweights, aggregate, writeinterphase,
+         combine, readinterphase, writeL2)
+
+
+class HyGCNModel(AcceleratorModel):
+    """Table IV assembled: the HyGCN per-tile data-movement model."""
+
+    name = "hygcn"
+
+    def evaluate(
+        self,
+        graph: GraphTileParams,
+        hw: HyGCNHardwareParams | None = None,
+    ) -> ModelOutput:
+        hw = hw or HyGCNHardwareParams()
+        return ModelOutput(
+            accelerator=self.name,
+            terms=tuple(row(graph, hw) for row in _ROWS),
+            meta={"hw": hw, "graph": graph},
+        )

@@ -1,0 +1,156 @@
+"""Notation of the paper (Table II), as typed parameter records.
+
+Every quantity is kept in the paper's units:
+
+* feature-vector sizes ``N`` (input) and ``T`` (output) are *element counts*,
+* ``sigma`` is the bit precision of one element,
+* ``B`` is the L2 memory bandwidth in **bits per iteration** (the paper's
+  iteration-granular bandwidth model),
+* PE counts ``M``/``M'`` (EnGN array) and ``Ma``/``Mc`` (HyGCN engines) are
+  numbers of processing elements.
+
+All records are plain dataclasses of scalars *or* numpy arrays — the closed
+forms in :mod:`repro.core.engn` / :mod:`repro.core.hygcn` broadcast, so a sweep
+is expressed by passing an array for the swept field (see
+:mod:`repro.core.sweep`).  Exact integer-valued float64 math is used throughout
+(ceil-of-ratio terms must not suffer float32 rounding at K ~ 10^6).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass
+from typing import Union
+
+import numpy as np
+
+ParamArray = Union[int, float, np.ndarray]
+
+__all__ = [
+    "ParamArray",
+    "GraphTileParams",
+    "EnGNHardwareParams",
+    "HyGCNHardwareParams",
+    "PAPER_DEFAULT_GRAPH",
+    "PAPER_DEFAULT_ENGN",
+    "PAPER_DEFAULT_HYGCN",
+    "paper_default_graph",
+]
+
+
+def _f64(x: ParamArray) -> np.ndarray:
+    """Promote a parameter to float64 (exact for all integer magnitudes used)."""
+    return np.asarray(x, dtype=np.float64)
+
+
+@dataclass(frozen=True)
+class GraphTileParams:
+    """Input-graph parameters of a single tile (Table II, left column).
+
+    Attributes:
+      N: size of the input feature vector (elements).
+      T: size of the output feature vector (elements).
+      K: number of vertices in the tile.
+      L: number of high-degree vertices in the tile (served by EnGN's
+         dedicated L2* vertex cache).  The paper gives no default; we follow
+         its "highly-connected vertices" narrative with L = K/10 unless
+         overridden (see :func:`paper_default_graph`).
+      P: number of edges in the tile.
+    """
+
+    N: ParamArray
+    T: ParamArray
+    K: ParamArray
+    L: ParamArray
+    P: ParamArray
+
+    def replace(self, **kw: ParamArray) -> "GraphTileParams":
+        return dataclasses.replace(self, **kw)
+
+    def astuple_f64(self) -> tuple[np.ndarray, ...]:
+        return tuple(_f64(v) for v in (self.N, self.T, self.K, self.L, self.P))
+
+
+@dataclass(frozen=True)
+class EnGNHardwareParams:
+    """EnGN architecture parameters (Table II, right column).
+
+    Attributes:
+      sigma: bit precision of a feature element.
+      B: L2 memory-bank bandwidth, bits/iteration.
+      B_star: dedicated high-degree vertex-cache (L2*) bandwidth,
+        bits/iteration.  Not given a default in the paper; defaults to ``B``.
+      M: PE-array rows (vertices processed concurrently).
+      M_prime: PE-array columns. EnGN default array is 128 x 16.
+    """
+
+    sigma: ParamArray = 4
+    B: ParamArray = 1000
+    B_star: ParamArray | None = None
+    M: ParamArray = 128
+    M_prime: ParamArray = 16
+
+    @property
+    def b_star(self) -> np.ndarray:
+        return _f64(self.B if self.B_star is None else self.B_star)
+
+    def replace(self, **kw: ParamArray) -> "EnGNHardwareParams":
+        return dataclasses.replace(self, **kw)
+
+
+@dataclass(frozen=True)
+class HyGCNHardwareParams:
+    """HyGCN architecture parameters (Table II, right column).
+
+    Attributes:
+      sigma: bit precision.
+      B: L2 memory bandwidth, bits/iteration.
+      Ma: aggregation-engine PEs (32 SIMD cores, each covering up to 8
+          feature components per step — the ``Ma * 8`` term in Table IV).
+      Mc: combination-engine PEs (systolic array, 8 x 4 x 128 = 4096).
+      gamma: systolic-array weight-reuse factor, 0 <= gamma < 1.
+      Ps_ratio: edges remaining after HyGCN's window sliding, as a fraction
+          of P.  The paper sets P_s ~ P, i.e. ratio 1.0.
+    """
+
+    sigma: ParamArray = 4
+    B: ParamArray = 1000
+    Ma: ParamArray = 32
+    Mc: ParamArray = 8 * 4 * 128
+    gamma: ParamArray = 0.5
+    Ps_ratio: ParamArray = 1.0
+
+    def Ps(self, P: ParamArray) -> np.ndarray:
+        return _f64(P) * _f64(self.Ps_ratio)
+
+    def replace(self, **kw: ParamArray) -> "HyGCNHardwareParams":
+        return dataclasses.replace(self, **kw)
+
+
+def paper_default_graph(
+    K: ParamArray = 1024,
+    *,
+    N: ParamArray = 30,
+    T: ParamArray = 5,
+    edge_factor: float = 10.0,
+    high_degree_fraction: float = 0.1,
+) -> GraphTileParams:
+    """Paper defaults (Sec. IV): N=30, T=5, P = 10 * K.
+
+    ``L`` (high-degree vertices) has no published default; we model the
+    degree-aware cache as serving 10% of the tile's vertices.
+    """
+    K_arr = _f64(K)
+    return GraphTileParams(
+        N=_f64(N),
+        T=_f64(T),
+        K=K_arr,
+        L=np.floor(K_arr * high_degree_fraction),
+        P=K_arr * edge_factor,
+    )
+
+
+#: Section IV default operating point: N=30, T=5, B=1000, sigma=4, P=10K.
+PAPER_DEFAULT_GRAPH = paper_default_graph()
+PAPER_DEFAULT_ENGN = EnGNHardwareParams()
+PAPER_DEFAULT_HYGCN = HyGCNHardwareParams()

@@ -1,0 +1,174 @@
+"""Parameter-sweep engine reproducing the paper's Figures 3-7.
+
+All closed forms in :mod:`repro.core.engn` / :mod:`repro.core.hygcn`
+broadcast, so a 2-D sweep is a single evaluation over ``np.meshgrid`` inputs
+— no Python loops.  Each ``figN_*`` function mirrors one figure of the paper
+at its Sec. IV defaults (N=30, T=5, B=1000, sigma=4, P=10K) and returns a
+:class:`SweepResult` with labelled axes and a per-term breakdown grid.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Mapping
+
+import numpy as np
+
+from .engn import EnGNModel
+from .hygcn import HyGCNModel
+from .notation import (EnGNHardwareParams, GraphTileParams,
+                       HyGCNHardwareParams, paper_default_graph)
+
+__all__ = [
+    "SweepResult",
+    "fig3_engn_movement",
+    "fig4_hygcn_movement",
+    "fig5_iterations_vs_bandwidth",
+    "fig6_fitting_factor",
+    "fig7_systolic_reuse",
+    "DEFAULT_K_SWEEP",
+    "DEFAULT_M_SWEEP",
+    "DEFAULT_B_SWEEP",
+]
+
+DEFAULT_K_SWEEP = np.array([64, 128, 256, 512, 1024, 2048, 4096, 8192], dtype=np.float64)
+DEFAULT_M_SWEEP = np.array([4, 8, 16, 32, 64, 128, 256], dtype=np.float64)
+DEFAULT_B_SWEEP = np.logspace(1, 5, 33, dtype=np.float64)  # 10 .. 100k bits/iter
+
+
+@dataclass(frozen=True)
+class SweepResult:
+    """A labelled sweep: ``axes`` name the grid dims of every value array."""
+
+    figure: str
+    axes: Mapping[str, np.ndarray]
+    data_bits: Mapping[str, np.ndarray]        # per movement level
+    iterations: Mapping[str, np.ndarray]       # per movement level
+    meta: Mapping[str, object] = field(default_factory=dict)
+
+    @property
+    def total_bits(self) -> np.ndarray:
+        return sum(self.data_bits.values())
+
+    @property
+    def total_iterations(self) -> np.ndarray:
+        return sum(self.iterations.values())
+
+    def rows(self) -> list[dict[str, float]]:
+        """Flatten to records — the benchmark harness prints these as CSV."""
+        names = list(self.axes)
+        grids = np.meshgrid(*[self.axes[n] for n in names], indexing="ij")
+        out: list[dict[str, float]] = []
+        total_b = np.broadcast_to(self.total_bits, grids[0].shape)
+        total_i = np.broadcast_to(self.total_iterations, grids[0].shape)
+        for idx in np.ndindex(grids[0].shape):
+            rec = {n: float(g[idx]) for n, g in zip(names, grids)}
+            rec["total_bits"] = float(total_b[idx])
+            rec["total_iterations"] = float(total_i[idx])
+            for term, arr in self.data_bits.items():
+                rec[f"bits_{term}"] = float(np.broadcast_to(arr, grids[0].shape)[idx])
+            out.append(rec)
+        return out
+
+
+def _grid(*axes: np.ndarray) -> tuple[np.ndarray, ...]:
+    return tuple(np.meshgrid(*axes, indexing="ij"))
+
+
+def fig3_engn_movement(
+    K: np.ndarray = DEFAULT_K_SWEEP,
+    M: np.ndarray = DEFAULT_M_SWEEP,
+) -> SweepResult:
+    """Fig. 3: EnGN per-level data movement across tile size and PE array.
+
+    The paper plots M = M' ("for the sake of clarity"); we sweep both equal.
+    """
+    Kg, Mg = _grid(np.asarray(K, np.float64), np.asarray(M, np.float64))
+    graph = paper_default_graph(Kg)
+    hw = EnGNHardwareParams(M=Mg, M_prime=Mg)
+    out = EnGNModel().evaluate(graph, hw)
+    return SweepResult(
+        figure="fig3",
+        axes={"K": np.asarray(K, np.float64), "M": np.asarray(M, np.float64)},
+        data_bits=out.breakdown(),
+        iterations=out.iteration_breakdown(),
+        meta={"model": "engn"},
+    )
+
+
+def fig4_hygcn_movement(
+    K: np.ndarray = DEFAULT_K_SWEEP,
+    Ma: np.ndarray = DEFAULT_M_SWEEP,
+) -> SweepResult:
+    """Fig. 4: HyGCN per-level data movement across tile size and SIMD cores."""
+    Kg, Mag = _grid(np.asarray(K, np.float64), np.asarray(Ma, np.float64))
+    graph = paper_default_graph(Kg)
+    hw = HyGCNHardwareParams(Ma=Mag)
+    out = HyGCNModel().evaluate(graph, hw)
+    return SweepResult(
+        figure="fig4",
+        axes={"K": np.asarray(K, np.float64), "Ma": np.asarray(Ma, np.float64)},
+        data_bits=out.breakdown(),
+        iterations=out.iteration_breakdown(),
+        meta={"model": "hygcn"},
+    )
+
+
+def fig5_iterations_vs_bandwidth(
+    accelerator: str,
+    B: np.ndarray = DEFAULT_B_SWEEP,
+    K: np.ndarray = np.array([256, 1024, 4096], dtype=np.float64),
+) -> SweepResult:
+    """Fig. 5(a)/(b): total iterations vs memory bandwidth per workload size."""
+    Bg, Kg = _grid(np.asarray(B, np.float64), np.asarray(K, np.float64))
+    graph = paper_default_graph(Kg)
+    if accelerator == "engn":
+        out = EnGNModel().evaluate(graph, EnGNHardwareParams(B=Bg))
+    elif accelerator == "hygcn":
+        out = HyGCNModel().evaluate(graph, HyGCNHardwareParams(B=Bg))
+    else:
+        raise ValueError(f"unknown accelerator {accelerator!r}")
+    return SweepResult(
+        figure="fig5a" if accelerator == "engn" else "fig5b",
+        axes={"B": np.asarray(B, np.float64), "K": np.asarray(K, np.float64)},
+        data_bits=out.breakdown(),
+        iterations=out.iteration_breakdown(),
+        meta={"model": accelerator},
+    )
+
+
+def fig6_fitting_factor(
+    K: float = 1024.0,
+    M: np.ndarray = np.array([4, 8, 16, 32, 64, 128, 256, 512], dtype=np.float64),
+) -> SweepResult:
+    """Fig. 6: EnGN iterations vs the array-fitting factor K*N / M^2."""
+    M = np.asarray(M, np.float64)
+    graph = paper_default_graph(K)
+    hw = EnGNHardwareParams(M=M, M_prime=M)
+    model = EnGNModel()
+    out = model.evaluate(graph, hw)
+    ff = model.fitting_factor(graph, hw)
+    return SweepResult(
+        figure="fig6",
+        axes={"M": M},
+        data_bits=out.breakdown(),
+        iterations=out.iteration_breakdown(),
+        meta={"model": "engn", "fitting_factor": ff, "K": K},
+    )
+
+
+def fig7_systolic_reuse(
+    gamma: np.ndarray = np.linspace(0.0, 0.99, 34),
+    N: np.ndarray = np.array([30, 128, 512], dtype=np.float64),
+) -> SweepResult:
+    """Fig. 7: HyGCN loadweights movement vs systolic reuse Gamma and depth N."""
+    Gg, Ng = _grid(np.asarray(gamma, np.float64), np.asarray(N, np.float64))
+    graph = paper_default_graph(1024.0).replace(N=Ng)
+    out = HyGCNModel().evaluate(graph, HyGCNHardwareParams(gamma=Gg))
+    return SweepResult(
+        figure="fig7",
+        axes={"gamma": np.asarray(gamma, np.float64), "N": np.asarray(N, np.float64)},
+        data_bits=out.breakdown(),
+        iterations=out.iteration_breakdown(),
+        meta={"model": "hygcn"},
+    )

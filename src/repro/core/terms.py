@@ -1,0 +1,182 @@
+"""Movement-term algebra shared by all analytical accelerator models.
+
+The paper characterizes an accelerator dataflow as a list of *movement
+levels*, each with (a) an amount of data movement in bits, (b) a number of
+iterations implied by PE / bandwidth constraints, and (c) the memory-hierarchy
+levels the traffic crosses.  This module provides the shared representation
+plus the handful of arithmetic helpers every closed form in Tables III/IV
+uses (``min`` of capacity constraints, ``ceil`` of occupancy ratios).
+
+Hierarchy classes
+-----------------
+``L2-L1`` / ``L1-L2``  off-array traffic through the memory bank (expensive,
+                       the paper quotes ~6x an L1 access);
+``L2*-L1`` / ``L1-L2*`` traffic through EnGN's dedicated high-degree vertex
+                       cache;
+``L1-L1``              on-array traffic (EnGN's ring-edge-reduce, HyGCN's
+                       SIMD aggregation / systolic combination).
+
+On the TPU adaptation (:mod:`repro.core.tpu_model`) the same classes are
+reused with ``L2 := HBM``, ``L1 := VMEM`` and the ``L1-L1`` class standing in
+for on-chip / inter-chip fabric traffic.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Callable, Iterable, Mapping, Sequence
+
+import numpy as np
+
+__all__ = [
+    "ceil",
+    "minimum",
+    "MovementTerm",
+    "ModelOutput",
+    "AcceleratorModel",
+    "L2_CLASSES",
+    "L1_CLASSES",
+    "CACHE_CLASSES",
+]
+
+L2_CLASSES = ("L2-L1", "L1-L2")
+CACHE_CLASSES = ("L2*-L1", "L1-L2*")
+L1_CLASSES = ("L1-L1",)
+_VALID_HIERARCHIES = frozenset(L2_CLASSES + CACHE_CLASSES + L1_CLASSES)
+
+
+def _f64(x) -> np.ndarray:
+    return np.asarray(x, dtype=np.float64)
+
+
+def ceil(x) -> np.ndarray:
+    """Exact ceiling in float64 (all operands in the models are integral)."""
+    return np.ceil(_f64(x))
+
+
+def minimum(*xs) -> np.ndarray:
+    """Variadic broadcasting minimum — the capacity-constraint operator."""
+    out = _f64(xs[0])
+    for x in xs[1:]:
+        out = np.minimum(out, _f64(x))
+    return out
+
+
+@dataclass(frozen=True)
+class MovementTerm:
+    """One movement level of Table III / Table IV.
+
+    ``data_bits`` and ``iterations`` broadcast together — array-valued when a
+    parameter sweep is evaluated.
+    """
+
+    name: str
+    hierarchy: str
+    data_bits: np.ndarray
+    iterations: np.ndarray
+
+    def __post_init__(self) -> None:
+        if self.hierarchy not in _VALID_HIERARCHIES:
+            raise ValueError(
+                f"unknown hierarchy {self.hierarchy!r} for term {self.name!r}; "
+                f"expected one of {sorted(_VALID_HIERARCHIES)}"
+            )
+        object.__setattr__(self, "data_bits", _f64(self.data_bits))
+        object.__setattr__(self, "iterations", _f64(self.iterations))
+
+    @property
+    def is_offchip(self) -> bool:
+        return self.hierarchy in L2_CLASSES
+
+    @property
+    def is_cache(self) -> bool:
+        return self.hierarchy in CACHE_CLASSES
+
+    @property
+    def is_onchip(self) -> bool:
+        return self.hierarchy in L1_CLASSES
+
+
+@dataclass(frozen=True)
+class ModelOutput:
+    """Evaluated model: the full movement-level breakdown for one dataflow."""
+
+    accelerator: str
+    terms: tuple[MovementTerm, ...]
+    meta: Mapping[str, object] = field(default_factory=dict)
+
+    def __getitem__(self, name: str) -> MovementTerm:
+        for t in self.terms:
+            if t.name == name:
+                return t
+        raise KeyError(f"{self.accelerator} model has no term {name!r}; "
+                       f"available: {[t.name for t in self.terms]}")
+
+    def names(self) -> list[str]:
+        return [t.name for t in self.terms]
+
+    def select(self, hierarchies: Sequence[str] | None = None) -> tuple[MovementTerm, ...]:
+        if hierarchies is None:
+            return self.terms
+        keep = frozenset(hierarchies)
+        return tuple(t for t in self.terms if t.hierarchy in keep)
+
+    def total_bits(self, hierarchies: Sequence[str] | None = None) -> np.ndarray:
+        terms = self.select(hierarchies)
+        return sum((t.data_bits for t in terms), start=_f64(0.0))
+
+    def total_iterations(self, hierarchies: Sequence[str] | None = None) -> np.ndarray:
+        terms = self.select(hierarchies)
+        return sum((t.iterations for t in terms), start=_f64(0.0))
+
+    def breakdown(self) -> dict[str, np.ndarray]:
+        return {t.name: t.data_bits for t in self.terms}
+
+    def iteration_breakdown(self) -> dict[str, np.ndarray]:
+        return {t.name: t.iterations for t in self.terms}
+
+    # Convenience groupings used throughout Sec. IV of the paper.
+    def offchip_bits(self) -> np.ndarray:
+        return self.total_bits(L2_CLASSES)
+
+    def cache_bits(self) -> np.ndarray:
+        return self.total_bits(CACHE_CLASSES)
+
+    def onchip_bits(self) -> np.ndarray:
+        return self.total_bits(L1_CLASSES)
+
+
+class AcceleratorModel:
+    """Base class: an analytical data-movement model of one accelerator.
+
+    Subclasses implement :meth:`evaluate` mapping (graph-tile params,
+    hardware params) -> :class:`ModelOutput`.  All closed forms broadcast, so
+    array-valued parameters evaluate whole sweeps in one call.
+    """
+
+    name: str = "abstract"
+
+    def evaluate(self, graph, hw) -> ModelOutput:  # pragma: no cover - interface
+        raise NotImplementedError
+
+    def total_bits(self, graph, hw, hierarchies=None) -> np.ndarray:
+        return self.evaluate(graph, hw).total_bits(hierarchies)
+
+    def total_iterations(self, graph, hw, hierarchies=None) -> np.ndarray:
+        return self.evaluate(graph, hw).total_iterations(hierarchies)
+
+
+def tabulate(output: ModelOutput, *, scalar_fmt: str = "{:>14.4g}") -> str:
+    """Render a ModelOutput of scalar terms as the paper's table layout."""
+    rows = [f"{'movement level':<18}{'data movement [bits]':>22}{'iterations':>14}  hierarchy"]
+    for t in output.terms:
+        bits = np.asarray(t.data_bits)
+        iters = np.asarray(t.iterations)
+        if bits.ndim == 0:
+            rows.append(
+                f"{t.name:<18}{scalar_fmt.format(float(bits)):>22}"
+                f"{scalar_fmt.format(float(iters)):>14}  {t.hierarchy}"
+            )
+        else:
+            rows.append(f"{t.name:<18}{'<array sweep>':>22}{'<array sweep>':>14}  {t.hierarchy}")
+    return "\n".join(rows)

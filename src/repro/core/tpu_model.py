@@ -1,0 +1,330 @@
+"""The paper's methodology adapted to a TPU v5e pod.
+
+The paper characterizes one ASIC: traffic between L2 and L1 plus on-array
+movement, term by term, as closed forms in graph/hardware parameters.  On a
+TPU pod the same decomposition becomes the *three-term roofline*:
+
+=====================  =============================================
+paper                  this module
+=====================  =============================================
+L2 <-> L1 traffic      HBM <-> VMEM bytes      -> ``memory_s``
+on-array (L1-L1)       MXU compute             -> ``compute_s``
+inter-PE ring (RER)    ICI collective bytes    -> ``collective_s``
+iterations             seconds (bandwidth-normalized)
+=====================  =============================================
+
+Two kinds of objects live here:
+
+1. :class:`TPUHardware` + :func:`roofline` — convert the dry-run's compiled
+   HLO counters (FLOPs, HBM bytes, collective wire bytes) into the
+   three seconds-valued roofline terms and identify the dominant one.
+2. Analytical *collective primitives* (:func:`allgather_bytes`, ...) and
+   per-parallel-strategy traffic models (:class:`CommTerm` lists) — the
+   TPU analogues of Table III/IV rows, later validated against the HLO
+   parser in :mod:`repro.core.hlo_analysis`.
+
+Conventions
+-----------
+* All byte quantities are **wire bytes received per chip** for one executed
+  step, assuming ring/bidirectional schedules (the standard XLA lowering).
+* FLOPs / HBM bytes from ``compiled.cost_analysis()`` are per-chip (the SPMD
+  module is the per-device program), so ``compute_s = flops / peak`` equals
+  the brief's ``HLO_FLOPs_global / (chips * peak)``.
+"""
+
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass, field
+from typing import Mapping, Sequence
+
+__all__ = [
+    "TPUHardware",
+    "TPU_V5E",
+    "RooflineReport",
+    "roofline",
+    "allgather_bytes",
+    "reduce_scatter_bytes",
+    "allreduce_bytes",
+    "all_to_all_bytes",
+    "collective_permute_bytes",
+    "CommTerm",
+    "CommModel",
+    "dp_gradient_sync",
+    "tp_activation_sync",
+    "moe_dispatch_sync",
+    "spmm_feature_allgather",
+    "ring_spmm_traffic",
+    "dlrm_embedding_exchange",
+]
+
+
+@dataclass(frozen=True)
+class TPUHardware:
+    """Per-chip TPU constants (brief-specified v5e numbers)."""
+
+    name: str = "tpu-v5e"
+    peak_flops_bf16: float = 197e12        # FLOP/s
+    hbm_bandwidth: float = 819e9           # bytes/s
+    ici_bandwidth_per_link: float = 50e9   # bytes/s per link
+    ici_links: int = 4                     # 2D-torus links per chip
+    hbm_bytes: int = 16 * 2**30
+    vmem_bytes: int = 128 * 2**20
+    mxu_dim: int = 128                     # systolic tile (alignment analysis)
+    dcn_bandwidth: float = 25e9            # bytes/s per chip, pod-to-pod
+
+
+TPU_V5E = TPUHardware()
+
+
+@dataclass(frozen=True)
+class RooflineReport:
+    """Three-term roofline for one (arch x shape x mesh) cell.
+
+    The brief's formulae:
+      compute_s    = HLO_FLOPs / (chips * peak)      [per-chip form]
+      memory_s     = HLO_bytes / (chips * hbm_bw)
+      collective_s = collective_bytes / (chips * link_bw)
+    """
+
+    cell: str
+    chips: int
+    compute_s: float
+    memory_s: float
+    collective_s: float
+    hlo_flops_per_chip: float
+    hbm_bytes_per_chip: float
+    collective_bytes_per_chip: float
+    model_flops: float = 0.0
+    meta: Mapping[str, object] = field(default_factory=dict)
+
+    @property
+    def dominant(self) -> str:
+        terms = {"compute": self.compute_s, "memory": self.memory_s,
+                 "collective": self.collective_s}
+        return max(terms, key=terms.get)
+
+    @property
+    def step_time_s(self) -> float:
+        """Optimistic overlapped bound: the slowest term gates the step."""
+        return max(self.compute_s, self.memory_s, self.collective_s)
+
+    @property
+    def step_time_serial_s(self) -> float:
+        """Pessimistic bound with zero overlap."""
+        return self.compute_s + self.memory_s + self.collective_s
+
+    @property
+    def useful_flop_ratio(self) -> float:
+        """MODEL_FLOPS / HLO_FLOPs — remat / padding / redundancy waste."""
+        total_hlo = self.hlo_flops_per_chip * self.chips
+        return self.model_flops / total_hlo if total_hlo else float("nan")
+
+    @property
+    def roofline_fraction(self) -> float:
+        """Fraction of the compute roofline achieved at the overlapped bound.
+
+        = useful-FLOPs time / step time; 1.0 means perfectly compute-bound
+        with zero wasted FLOPs.  This is the §Perf score.
+        """
+        if not self.model_flops:
+            return float("nan")
+        ideal = self.model_flops / (self.chips * TPU_V5E.peak_flops_bf16)
+        return ideal / self.step_time_s if self.step_time_s else float("nan")
+
+    def row(self) -> dict[str, object]:
+        return {
+            "cell": self.cell,
+            "chips": self.chips,
+            "compute_s": self.compute_s,
+            "memory_s": self.memory_s,
+            "collective_s": self.collective_s,
+            "dominant": self.dominant,
+            "step_time_s": self.step_time_s,
+            "model_flops": self.model_flops,
+            "useful_flop_ratio": self.useful_flop_ratio,
+            "roofline_fraction": self.roofline_fraction,
+        }
+
+
+def roofline(
+    *,
+    cell: str,
+    chips: int,
+    flops_per_chip: float,
+    hbm_bytes_per_chip: float,
+    collective_bytes_per_chip: float,
+    model_flops: float = 0.0,
+    hw: TPUHardware = TPU_V5E,
+    meta: Mapping[str, object] | None = None,
+) -> RooflineReport:
+    return RooflineReport(
+        cell=cell,
+        chips=chips,
+        compute_s=flops_per_chip / hw.peak_flops_bf16,
+        memory_s=hbm_bytes_per_chip / hw.hbm_bandwidth,
+        collective_s=collective_bytes_per_chip / hw.ici_bandwidth_per_link,
+        hlo_flops_per_chip=flops_per_chip,
+        hbm_bytes_per_chip=hbm_bytes_per_chip,
+        collective_bytes_per_chip=collective_bytes_per_chip,
+        model_flops=model_flops,
+        meta=dict(meta or {}),
+    )
+
+
+# ---------------------------------------------------------------------------
+# Collective primitives: wire bytes received per chip for ring schedules.
+# These are the TPU analogues of the paper's min(.)*ceil(.) capacity forms;
+# on a ring the "iterations" are the n-1 hops and the per-hop payload is the
+# shard, so data movement is shard * (n-1) exactly as EnGN's RER moves
+# M*(M-1)*T elements around its PE ring.
+# ---------------------------------------------------------------------------
+
+def allgather_bytes(global_bytes: float, n: int) -> float:
+    """Ring all-gather of a tensor of ``global_bytes``: recv (n-1)/n of it."""
+    return global_bytes * (n - 1) / n if n > 1 else 0.0
+
+
+def reduce_scatter_bytes(global_bytes: float, n: int) -> float:
+    return global_bytes * (n - 1) / n if n > 1 else 0.0
+
+
+def allreduce_bytes(global_bytes: float, n: int) -> float:
+    """Ring all-reduce = reduce-scatter + all-gather."""
+    return 2.0 * global_bytes * (n - 1) / n if n > 1 else 0.0
+
+
+def all_to_all_bytes(per_chip_bytes: float, n: int) -> float:
+    """Each chip re-distributes its shard: keeps 1/n, exchanges the rest."""
+    return per_chip_bytes * (n - 1) / n if n > 1 else 0.0
+
+
+def collective_permute_bytes(per_chip_bytes: float) -> float:
+    return per_chip_bytes
+
+
+@dataclass(frozen=True)
+class CommTerm:
+    """One analytical communication term (a TPU 'movement level')."""
+
+    name: str
+    fabric: str                  # "ici" | "dcn" | "hbm"
+    bytes_per_chip: float
+    description: str = ""
+
+
+@dataclass(frozen=True)
+class CommModel:
+    """A list of CommTerms = the communication model of one strategy."""
+
+    strategy: str
+    terms: tuple[CommTerm, ...]
+
+    def total(self, fabric: str | None = None) -> float:
+        return sum(t.bytes_per_chip for t in self.terms
+                   if fabric is None or t.fabric == fabric)
+
+    def __getitem__(self, name: str) -> CommTerm:
+        for t in self.terms:
+            if t.name == name:
+                return t
+        raise KeyError(name)
+
+
+# ---------------------------------------------------------------------------
+# Per-strategy analytical models.
+# ---------------------------------------------------------------------------
+
+def dp_gradient_sync(param_bytes: float, dp: int, *,
+                     compressed_ratio: float = 1.0) -> CommModel:
+    """Data-parallel gradient all-reduce over ``dp`` chips per step.
+
+    ``compressed_ratio`` < 1 models int8 error-feedback compression
+    (repro.optim.compression): wire bytes scale with the compressed width.
+    """
+    return CommModel("dp", (
+        CommTerm("grad_allreduce", "ici",
+                 allreduce_bytes(param_bytes * compressed_ratio, dp),
+                 f"ring all-reduce of {param_bytes:.3g}B grads over dp={dp}"),
+    ))
+
+
+def tp_activation_sync(act_bytes_per_layer: float, layers: int, tp: int,
+                       *, seq_sharded: bool = True) -> CommModel:
+    """Megatron-style tensor parallelism: per layer, one all-gather into each
+    of the two blocks (attn, mlp) and one reduce-scatter out of each when
+    activations are sequence-sharded; plain all-reduce otherwise."""
+    if seq_sharded:
+        per_layer = 2 * (allgather_bytes(act_bytes_per_layer, tp)
+                         + reduce_scatter_bytes(act_bytes_per_layer, tp))
+        desc = "AG+RS x2 blocks/layer (sequence-sharded residual)"
+    else:
+        per_layer = 2 * allreduce_bytes(act_bytes_per_layer, tp)
+        desc = "all-reduce x2 blocks/layer"
+    return CommModel("tp", (
+        CommTerm("tp_collectives", "ici", per_layer * layers, desc),
+    ))
+
+
+def moe_dispatch_sync(tokens_per_chip: int, d_model: int, top_k: int,
+                      ep: int, layers: int, *, dtype_bytes: int = 2) -> CommModel:
+    """Expert-parallel all-to-all: dispatch + return, per MoE layer."""
+    payload = tokens_per_chip * top_k * d_model * dtype_bytes
+    per_layer = 2 * all_to_all_bytes(payload, ep)
+    return CommModel("ep", (
+        CommTerm("moe_all_to_all", "ici", per_layer * layers,
+                 f"dispatch+combine a2a of {payload:.3g}B x {layers} layers"),
+    ))
+
+
+def spmm_feature_allgather(n_nodes: int, d_feat: int, n: int,
+                           *, dtype_bytes: int = 4, layers: int = 1) -> CommModel:
+    """Baseline 1D-partitioned SpMM (paper-faithful "stream all vertices"):
+    every chip all-gathers the full feature matrix each layer — the pod-scale
+    analogue of EnGN's loadvertL2 with no degree cache."""
+    global_bytes = n_nodes * d_feat * dtype_bytes
+    return CommModel("spmm_1d", (
+        CommTerm("feature_allgather", "ici",
+                 allgather_bytes(global_bytes, n) * layers,
+                 f"all-gather {global_bytes:.3g}B node features x {layers} layers"),
+    ))
+
+
+def ring_spmm_traffic(n_nodes: int, d_feat: int, n: int,
+                      *, dtype_bytes: int = 4, layers: int = 1) -> CommModel:
+    """RER-adapted ring SpMM: feature shards circulate the ICI ring, each hop
+    overlapped with the local segment-sum of the resident shard.
+
+    Total wire volume equals the all-gather (the ring moves the same bytes —
+    EnGN's Fig. 3 lesson that RER movement is large but cheap because it
+    stays on the fast fabric), but no chip ever materializes the full
+    feature matrix, and each hop is overlappable with compute.
+    """
+    global_bytes = n_nodes * d_feat * dtype_bytes
+    return CommModel("spmm_ring", (
+        CommTerm("ring_hops", "ici",
+                 allgather_bytes(global_bytes, n) * layers,
+                 f"{n - 1} ppermute hops of {global_bytes / max(n,1):.3g}B shards"),
+    ))
+
+
+def dlrm_embedding_exchange(batch_per_chip: int, n_tables: int, embed_dim: int,
+                            n: int, *, dtype_bytes: int = 4,
+                            with_backward: bool = True) -> CommModel:
+    """Model-parallel embedding tables + data-parallel MLPs: the MLPerf DLRM
+    hybrid.  Forward: pooled embeddings all-to-all from table-major to
+    batch-major; backward mirrors it with gradients."""
+    payload = batch_per_chip * n_tables * embed_dim * dtype_bytes
+    factor = 2 if with_backward else 1
+    return CommModel("dlrm_hybrid", (
+        CommTerm("embedding_all_to_all", "ici",
+                 factor * all_to_all_bytes(payload, n),
+                 f"a2a of {payload:.3g}B pooled embeddings (fwd{'+bwd' if with_backward else ''})"),
+    ))
+
+
+def mxu_padding_waste(dim: int, hw: TPUHardware = TPU_V5E) -> float:
+    """Fraction of MXU work wasted padding ``dim`` to the systolic tile —
+    the TPU re-statement of EnGN's array-fitting factor (Fig. 6)."""
+    padded = math.ceil(dim / hw.mxu_dim) * hw.mxu_dim
+    return 1.0 - dim / padded

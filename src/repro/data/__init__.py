@@ -1,0 +1,1 @@
+"""Data pipeline: synthetic generators, neighbor sampler, Wigner blocks."""

@@ -1,0 +1,96 @@
+"""k-hop fanout neighbor sampler (GraphSAGE-style) over a CSR adjacency.
+
+``minibatch_lg`` requires a real sampler, not a stub: given seed nodes and
+per-layer fanouts it walks the CSR structure, uniformly samples up to
+``fanout[l]`` in-neighbors per frontier node, and emits a PADDED subgraph
+with static shapes (the padded sizes match
+:func:`repro.launch.steps.sampled_subgraph_sizes`, so one compiled
+train-step serves every sampled batch).
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import numpy as np
+
+__all__ = ["CSRGraph", "build_csr", "sample_subgraph", "SampledSubgraph"]
+
+
+@dataclass
+class CSRGraph:
+    """In-neighbor CSR: for node v, neighbors are col[ptr[v]:ptr[v+1]]."""
+
+    ptr: np.ndarray
+    col: np.ndarray
+    n_nodes: int
+
+
+def build_csr(senders: np.ndarray, receivers: np.ndarray,
+              n_nodes: int) -> CSRGraph:
+    order = np.argsort(receivers, kind="stable")
+    col = senders[order].astype(np.int32)
+    counts = np.bincount(receivers, minlength=n_nodes)
+    ptr = np.zeros(n_nodes + 1, np.int64)
+    np.cumsum(counts, out=ptr[1:])
+    return CSRGraph(ptr=ptr, col=col, n_nodes=n_nodes)
+
+
+@dataclass
+class SampledSubgraph:
+    """Padded sampled subgraph with LOCAL node ids (0..n_sub)."""
+
+    node_ids: np.ndarray       # (N_pad,) global ids (0-padded)
+    senders: np.ndarray        # (E_pad,) local ids
+    receivers: np.ndarray      # (E_pad,) local ids
+    node_mask: np.ndarray      # (N_pad,) float {0,1}
+    edge_mask: np.ndarray      # (E_pad,) float {0,1}
+    seed_mask: np.ndarray      # (N_pad,) float — loss restricted to seeds
+    n_real_nodes: int
+    n_real_edges: int
+
+
+def sample_subgraph(g: CSRGraph, seeds: np.ndarray, fanout: tuple[int, ...],
+                    *, rng: np.random.Generator, n_pad: int,
+                    e_pad: int) -> SampledSubgraph:
+    node_ids: list[int] = list(seeds)
+    local = {int(v): i for i, v in enumerate(seeds)}
+    snd_l: list[int] = []
+    rcv_l: list[int] = []
+    frontier = list(seeds)
+    for f in fanout:
+        nxt: list[int] = []
+        for v in frontier:
+            lo, hi = g.ptr[v], g.ptr[v + 1]
+            deg = hi - lo
+            if deg == 0:
+                continue
+            take = min(f, int(deg))
+            picks = g.col[lo + rng.choice(deg, size=take, replace=False)]
+            for u in picks:
+                u = int(u)
+                if u not in local:
+                    local[u] = len(node_ids)
+                    node_ids.append(u)
+                snd_l.append(local[u])
+                rcv_l.append(local[int(v)])
+                nxt.append(u)
+        frontier = nxt
+    n_real, e_real = len(node_ids), len(snd_l)
+    if n_real > n_pad or e_real > e_pad:
+        raise ValueError(f"sample exceeds padding: nodes {n_real}>{n_pad} "
+                         f"or edges {e_real}>{e_pad}")
+
+    ids = np.zeros(n_pad, np.int32)
+    ids[:n_real] = node_ids
+    snd = np.zeros(e_pad, np.int32)
+    snd[:e_real] = snd_l
+    rcv = np.zeros(e_pad, np.int32)
+    rcv[:e_real] = rcv_l
+    nmask = np.zeros(n_pad, np.float32)
+    nmask[:n_real] = 1.0
+    emask = np.zeros(e_pad, np.float32)
+    emask[:e_real] = 1.0
+    smask = np.zeros(n_pad, np.float32)
+    smask[:len(seeds)] = 1.0
+    return SampledSubgraph(ids, snd, rcv, nmask, emask, smask, n_real, e_real)

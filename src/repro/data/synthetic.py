@@ -1,0 +1,110 @@
+"""Synthetic data generators (host-side numpy, deterministic by (seed, step)).
+
+Every generator is a pure function of (seed, step) so a restarted job
+regenerates exactly the batch stream it was consuming — the data-pipeline
+half of fault tolerance (checkpoint/manager.py handles the model half).
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Optional
+
+import numpy as np
+
+__all__ = ["lm_batch", "power_law_graph", "criteo_batch", "molecule_batch",
+           "GraphArrays"]
+
+
+def _rng(seed: int, step: int) -> np.random.Generator:
+    return np.random.default_rng(np.random.SeedSequence([seed, step]))
+
+
+def lm_batch(seed: int, step: int, *, batch: int, seq: int,
+             vocab: int) -> dict[str, np.ndarray]:
+    """Zipfian token stream (vocabulary rank-frequency like real text)."""
+    r = _rng(seed, step)
+    toks = r.zipf(1.3, size=(batch, seq + 1)).astype(np.int64)
+    toks = np.minimum(toks - 1, vocab - 1).astype(np.int32)
+    return {"tokens": toks[:, :-1], "labels": toks[:, 1:]}
+
+
+@dataclass
+class GraphArrays:
+    senders: np.ndarray
+    receivers: np.ndarray
+    node_feat: np.ndarray
+    labels: np.ndarray
+    edge_weight: Optional[np.ndarray] = None
+
+    @property
+    def n_nodes(self) -> int:
+        return self.node_feat.shape[0]
+
+    @property
+    def n_edges(self) -> int:
+        return self.senders.shape[0]
+
+
+def power_law_graph(seed: int, *, n_nodes: int, n_edges: int, d_feat: int,
+                    n_classes: int = 7, alpha: float = 1.6,
+                    self_loops: bool = True) -> GraphArrays:
+    """Preferential-attachment-flavoured random graph: destination degrees
+    follow a power law (the workload imbalance the paper highlights)."""
+    r = _rng(seed, 0)
+    # power-law weights over nodes for choosing edge endpoints
+    w = (np.arange(1, n_nodes + 1, dtype=np.float64)) ** (-alpha)
+    w /= w.sum()
+    perm = r.permutation(n_nodes)
+    senders = perm[r.choice(n_nodes, size=n_edges, p=w)]
+    receivers = perm[r.choice(n_nodes, size=n_edges, p=w)]
+    # avoid self loops (equivariant-model contract; GCN re-adds them)
+    clash = senders == receivers
+    receivers[clash] = (receivers[clash] + 1) % n_nodes
+    if self_loops:
+        senders = np.concatenate([senders, np.arange(n_nodes)])
+        receivers = np.concatenate([receivers, np.arange(n_nodes)])
+    feat = r.standard_normal((n_nodes, d_feat)).astype(np.float32)
+    labels = r.integers(0, n_classes, n_nodes).astype(np.int32)
+    return GraphArrays(senders.astype(np.int32), receivers.astype(np.int32),
+                       feat, labels)
+
+
+def criteo_batch(seed: int, step: int, *, batch: int, n_dense: int,
+                 vocab_sizes: tuple[int, ...], multi_hot: int = 1,
+                 zipf: float = 1.2) -> dict[str, np.ndarray]:
+    """Criteo-like batch: log-normal dense features, Zipfian categorical ids
+    (hot rows dominate — the degree-aware-cache workload of the paper)."""
+    r = _rng(seed, step)
+    dense = r.lognormal(0.0, 1.0, (batch, n_dense)).astype(np.float32)
+    dense = np.log1p(dense)
+    sparse = np.zeros((batch, len(vocab_sizes), multi_hot), np.int64)
+    for t, v in enumerate(vocab_sizes):
+        raw = r.zipf(zipf, size=(batch, multi_hot))
+        sparse[:, t, :] = np.minimum(raw - 1, v - 1)
+    # ~3% positive CTR-ish labels correlated with first dense feature
+    p = 1.0 / (1.0 + np.exp(2.5 - dense[:, 0]))
+    labels = (r.random(batch) < p).astype(np.int32)
+    return {"dense": dense, "sparse": sparse.astype(np.int32),
+            "labels": labels}
+
+
+def molecule_batch(seed: int, step: int, *, batch: int, n_nodes: int,
+                   n_edges: int, d_feat: int) -> dict[str, np.ndarray]:
+    """Batched random 3D molecules (positions + kNN-ish edges, no self
+    loops); graph-level scalar target = a smooth function of geometry."""
+    r = _rng(seed, step)
+    pos = r.standard_normal((batch, n_nodes, 3)).astype(np.float64)
+    snd = np.zeros((batch, n_edges), np.int64)
+    rcv = np.zeros((batch, n_edges), np.int64)
+    for b in range(batch):
+        s = r.integers(0, n_nodes, n_edges)
+        d = (s + 1 + r.integers(0, n_nodes - 1, n_edges)) % n_nodes
+        snd[b], rcv[b] = s, d
+    feat = r.standard_normal((batch, n_nodes, d_feat)).astype(np.float32)
+    # invariant target: mean pairwise distance per graph
+    tgt = np.stack([np.linalg.norm(pos[b][snd[b]] - pos[b][rcv[b]], axis=-1).mean()
+                    for b in range(batch)]).astype(np.float32)
+    return {"positions": pos, "senders": snd.astype(np.int32),
+            "receivers": rcv.astype(np.int32), "node_feat": feat,
+            "labels": tgt[:, None]}

@@ -1,0 +1,151 @@
+"""Real spherical-harmonic rotation (Wigner) matrices, numpy host-side.
+
+EquiformerV2's eSCN convolution rotates each edge's irrep features so the
+edge vector aligns with +z, applies an SO(2)-block linear map, and rotates
+back.  The per-edge rotation matrices are data-pipeline products (host
+numpy), shipped to the device as regular arrays — exactly how OCP's eSCN
+implementation treats them.
+
+The recursion below is Ivanic & Ruedenberg (J. Phys. Chem. 1996, 1998
+erratum): real-SH rotation matrices R^l are built from R^1 and R^{l-1}
+via the u,v,w coefficient tables.  Conventions: real SH ordering
+m = -l..l; R^1 acts on (Y_1^{-1}, Y_1^0, Y_1^1) ~ (y, z, x).
+"""
+
+from __future__ import annotations
+
+import math
+
+import numpy as np
+
+__all__ = ["wigner_d_real", "wigner_stack", "rotation_to_z", "random_rotation"]
+
+
+def _r1_from_rotation(R: np.ndarray) -> np.ndarray:
+    """Map a 3x3 Cartesian rotation (acting on x,y,z) to the l=1 real-SH
+    basis ordered (m=-1,0,1) ~ (y, z, x)."""
+    # permutation P: (y,z,x) ordering
+    P = np.array([[0, 1, 0], [0, 0, 1], [1, 0, 0]], dtype=np.float64)
+    return P @ R @ P.T
+
+
+def _P(i: int, l: int, mu: int, m_: int, r1: np.ndarray, rlm1: np.ndarray) -> float:
+    """Helper P_i^{mu,m} of the recursion (Ivanic & Ruedenberg Table 1)."""
+    # r1 indices: -1,0,1 -> 0,1,2 ; rlm1 indices: -(l-1)..(l-1) -> offset l-1
+    ri = lambda a, b: r1[a + 1, b + 1]
+    rl = lambda a, b: rlm1[a + l - 1, b + l - 1]
+    if m_ == l:
+        return ri(i, 1) * rl(mu, l - 1) - ri(i, -1) * rl(mu, -(l - 1))
+    if m_ == -l:
+        return ri(i, 1) * rl(mu, -(l - 1)) + ri(i, -1) * rl(mu, l - 1)
+    return ri(i, 0) * rl(mu, m_)
+
+
+def _uvw(l: int, mu: int, m_: int) -> tuple[float, float, float]:
+    d = 1.0 if mu == 0 else 0.0
+    if abs(m_) < l:
+        denom = (l + m_) * (l - m_)
+    else:
+        denom = (2 * l) * (2 * l - 1)
+    u = math.sqrt((l + mu) * (l - mu) / denom)
+    v = 0.5 * math.sqrt((1 + d) * (l + abs(mu) - 1) * (l + abs(mu)) / denom) * (1 - 2 * d)
+    w = -0.5 * math.sqrt((l - abs(mu) - 1) * (l - abs(mu)) / denom) * (1 - d)
+    return u, v, w
+
+
+def _wigner_next(l: int, r1: np.ndarray, rlm1: np.ndarray) -> np.ndarray:
+    """R^l from R^1 and R^{l-1}."""
+    size = 2 * l + 1
+    out = np.zeros((size, size), dtype=np.float64)
+    for mu in range(-l, l + 1):
+        for m_ in range(-l, l + 1):
+            u, v, w = _uvw(l, mu, m_)
+            val = 0.0
+            if u:
+                val += u * _P(0, l, mu, m_, r1, rlm1)
+            if v:
+                if mu == 0:
+                    val += v * (_P(1, l, 1, m_, r1, rlm1)
+                                + _P(-1, l, -1, m_, r1, rlm1))
+                elif mu > 0:
+                    val += v * (_P(1, l, mu - 1, m_, r1, rlm1)
+                                * math.sqrt(1 + (1.0 if mu == 1 else 0.0))
+                                - _P(-1, l, -mu + 1, m_, r1, rlm1)
+                                * (0.0 if mu == 1 else 1.0))
+                else:
+                    val += v * (_P(1, l, mu + 1, m_, r1, rlm1)
+                                * (0.0 if mu == -1 else 1.0)
+                                + _P(-1, l, -mu - 1, m_, r1, rlm1)
+                                * math.sqrt(1 + (1.0 if mu == -1 else 0.0)))
+            if w:
+                if mu > 0:
+                    val += w * (_P(1, l, mu + 1, m_, r1, rlm1)
+                                + _P(-1, l, -mu - 1, m_, r1, rlm1))
+                elif mu < 0:
+                    val += w * (_P(1, l, mu - 1, m_, r1, rlm1)
+                                - _P(-1, l, -mu + 1, m_, r1, rlm1))
+            out[mu + l, m_ + l] = val
+    return out
+
+
+def wigner_d_real(R: np.ndarray, l_max: int) -> list[np.ndarray]:
+    """Real-SH rotation matrices [R^0 .. R^{l_max}] for Cartesian rotation R."""
+    mats = [np.ones((1, 1), dtype=np.float64)]
+    if l_max >= 1:
+        mats.append(_r1_from_rotation(np.asarray(R, np.float64)))
+    for l in range(2, l_max + 1):
+        mats.append(_wigner_next(l, mats[1], mats[-1]))
+    return mats
+
+
+def wigner_stack(Rs: np.ndarray, l_max: int, *, m_max: int | None = None,
+                 dtype=np.float32) -> dict[int, np.ndarray]:
+    """Per-edge rotation blocks {l: (E, m_dim, 2l+1)}.
+
+    With eSCN's m_max restriction only the rows |m| <= m_max are kept (the
+    SO(2) conv never reads the others).  Rows are ALWAYS reordered to
+    (m=0, m=1c, m=1s, ..., c, s) — real-SH index l+m supplies the 'cos' row
+    and l-m the 'sin' row — matching the layout
+    :func:`repro.models.gnn.equiformer_v2._so2_conv` consumes.
+    """
+    E = Rs.shape[0]
+    out: dict[int, np.ndarray] = {}
+    per_edge = [wigner_d_real(Rs[e], l_max) for e in range(E)]
+    for l in range(l_max + 1):
+        full = np.stack([pe[l] for pe in per_edge])  # (E, 2l+1, 2l+1)
+        m_keep = l if m_max is None else min(l, m_max)
+        rows = [l]  # m = 0 row index in (-l..l) offset l
+        for m in range(1, m_keep + 1):
+            rows.extend([l + m, l - m])
+        out[l] = full[:, rows, :].astype(dtype)
+    return out
+
+
+def rotation_to_z(vec: np.ndarray) -> np.ndarray:
+    """Rotation matrix taking ``vec`` (3,) to +z (Rodrigues)."""
+    v = np.asarray(vec, np.float64)
+    n = np.linalg.norm(v)
+    if n < 1e-12:
+        return np.eye(3)
+    v = v / n
+    z = np.array([0.0, 0.0, 1.0])
+    axis = np.cross(v, z)
+    s = np.linalg.norm(axis)
+    c = float(v @ z)
+    if s < 1e-12:
+        return np.eye(3) if c > 0 else np.diag([1.0, -1.0, -1.0])
+    axis = axis / s
+    K = np.array([[0, -axis[2], axis[1]],
+                  [axis[2], 0, -axis[0]],
+                  [-axis[1], axis[0], 0]])
+    return np.eye(3) + s * K + (1 - c) * (K @ K)
+
+
+def random_rotation(rng: np.random.Generator) -> np.ndarray:
+    """Uniform random rotation via QR of a Gaussian matrix."""
+    A = rng.standard_normal((3, 3))
+    Q, R = np.linalg.qr(A)
+    Q = Q @ np.diag(np.sign(np.diag(R)))
+    if np.linalg.det(Q) < 0:
+        Q[:, 0] = -Q[:, 0]
+    return Q

@@ -1,0 +1,6 @@
+"""Distribution substrate: meshes, sharding policies, collectives, pipeline
+parallelism, resilience."""
+
+from .sharding import ShardingPolicy, make_policy
+
+__all__ = ["ShardingPolicy", "make_policy"]

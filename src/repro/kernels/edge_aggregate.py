@@ -1,0 +1,89 @@
+"""Fused GNN aggregate+combine Pallas kernel (TPU-adapted from the paper).
+
+The paper's two accelerators split a GNN layer into an *aggregation* stage
+and a *combination* stage.  HyGCN pipelines them through an inter-phase
+buffer whose write/read traffic (Table IV ``writeinterphase`` /
+``readinterphase``) is, per Fig. 4, a dominant share of its off-chip data
+movement.  EnGN avoids the buffer by running both stages on one PE array.
+
+TPU adaptation (DESIGN.md §3):
+* The gather/scatter aggregation becomes **block-dense SpMM**: the pipeline
+  tiles the adjacency into (BN x BK) dense blocks (zeros where no edge —
+  the MXU eats zeros at full rate, and real GNN accelerators for TPU-class
+  hardware do exactly this), so aggregation is a masked matmul.
+* Aggregate and combine are FUSED in one kernel: the aggregated tile lives
+  in a VMEM accumulator and is immediately multiplied by the combine weight
+  W — the inter-phase buffer collapses into registers.  The HBM traffic
+  eliminated per (K-node, N-feature) tile is exactly the paper's
+  ``K*N*sigma`` write + ``P_s*N*sigma`` read terms.
+
+Grid: (num dst node blocks, num src node blocks).  For each dst block i the
+kernel accumulates sum_j A[i,j] @ X[j] in VMEM and, on the last j, applies
+the (F x T) combine weight and writes the (BN x T) output tile once.
+
+``emit(..., interpret=True)`` validates on CPU; ops.py wraps it jitted.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+DEFAULT_BLOCK_N = 256   # dst nodes per tile (the paper's K)
+DEFAULT_BLOCK_K = 256   # src nodes per tile
+
+
+def _kernel(a_ref, x_ref, w_ref, out_ref, acc_ref, *, n_src_blocks: int):
+    j = pl.program_id(1)
+
+    @pl.when(j == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    # Aggregation micro-step on the MXU: (BN, BK) @ (BK, F).
+    acc_ref[...] += jnp.dot(a_ref[...], x_ref[...],
+                            preferred_element_type=jnp.float32)
+
+    @pl.when(j == n_src_blocks - 1)
+    def _combine():
+        # Combination stage fused in: no inter-phase buffer ever leaves VMEM.
+        out_ref[...] = jnp.dot(acc_ref[...], w_ref[...],
+                               preferred_element_type=jnp.float32
+                               ).astype(out_ref.dtype)
+
+
+def fused_aggregate_combine(adjacency: jax.Array, x: jax.Array, w: jax.Array,
+                            *, block_n: int = DEFAULT_BLOCK_N,
+                            block_k: int = DEFAULT_BLOCK_K,
+                            interpret: bool = True) -> jax.Array:
+    """Y = (A @ X) @ W with A (N, N) block-dense, X (N, F), W (F, T).
+
+    N must divide evenly into block_n/block_k tiles (the data pipeline pads
+    graphs to these multiples, mirroring the paper's tiling preprocessing).
+    """
+    n, f = x.shape
+    t = w.shape[1]
+    assert adjacency.shape == (n, n), (adjacency.shape, n)
+    assert w.shape[0] == f
+    block_n = min(block_n, n)
+    block_k = min(block_k, n)
+    assert n % block_n == 0 and n % block_k == 0, (n, block_n, block_k)
+    grid = (n // block_n, n // block_k)
+
+    return pl.pallas_call(
+        functools.partial(_kernel, n_src_blocks=grid[1]),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_n, block_k), lambda i, j: (i, j)),   # A tile
+            pl.BlockSpec((block_k, f), lambda i, j: (j, 0)),         # X tile
+            pl.BlockSpec((f, t), lambda i, j: (0, 0)),               # W
+        ],
+        out_specs=pl.BlockSpec((block_n, t), lambda i, j: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((n, t), x.dtype),
+        scratch_shapes=[pltpu.VMEM((block_n, f), jnp.float32)],
+        interpret=interpret,
+    )(adjacency, x, w)

@@ -1,0 +1,136 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile EVERY (arch x shape x mesh) cell.
+
+The two lines above MUST stay first (before any jax import): jax locks the
+device count at first initialization, and the production meshes need 512
+placeholder host devices.  Smoke tests / benchmarks never import this
+module, so they see the single real CPU device.
+
+For each cell we record to results/dryrun/<mesh>/<arch>__<shape>.json:
+  * memory_analysis (bytes per device: args/outputs/temps) — proves fit,
+  * cost_analysis (HLO FLOPs, bytes accessed) — feeds §Roofline,
+  * the collective schedule parsed from optimized HLO (wire bytes per chip
+    by kind) — the paper-methodology traffic ground truth.
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.dryrun [--arch A] [--shape S]
+      [--mesh single|multi|both] [--force]
+"""
+
+import argparse
+import json
+import time
+import traceback
+from pathlib import Path
+
+import jax
+
+from ..configs import all_archs, get_arch
+from ..core.hlo_analysis import parse_collectives
+from .mesh import make_production_mesh
+from .steps import build_cell
+
+RESULTS_DIR = Path(__file__).resolve().parents[3] / "results" / "dryrun"
+
+
+def run_cell(arch_name: str, shape_name: str, mesh_name: str,
+             *, force: bool = False, policy_kw: dict | None = None,
+             tag: str = "") -> dict:
+    out_dir = RESULTS_DIR / mesh_name
+    out_dir.mkdir(parents=True, exist_ok=True)
+    out_path = out_dir / f"{arch_name}__{shape_name}{tag}.json"
+    if out_path.exists() and not force:
+        return json.loads(out_path.read_text())
+
+    mesh = make_production_mesh(multi_pod=(mesh_name == "multi"))
+    t0 = time.time()
+    record: dict = {"arch": arch_name, "shape": shape_name, "mesh": mesh_name,
+                    "chips": mesh.size}
+    try:
+        plan = build_cell(arch_name, shape_name, mesh, **(policy_kw or {}))
+        record["kind"] = plan.kind
+        record["model_flops"] = plan.model_flops
+        record["meta"] = {k: str(v) for k, v in plan.meta.items()}
+        lowered = plan.lower(mesh)
+        t_lower = time.time()
+        compiled = lowered.compile()
+        t_compile = time.time()
+
+        mem = compiled.memory_analysis()
+        cost = compiled.cost_analysis()
+        stats = parse_collectives(compiled.as_text())
+
+        record.update({
+            "ok": True,
+            "lower_s": round(t_lower - t0, 2),
+            "compile_s": round(t_compile - t_lower, 2),
+            "memory": {
+                "argument_bytes": mem.argument_size_in_bytes,
+                "output_bytes": mem.output_size_in_bytes,
+                "temp_bytes": mem.temp_size_in_bytes,
+                "alias_bytes": mem.alias_size_in_bytes,
+                "code_bytes": mem.generated_code_size_in_bytes,
+                # Upper bound on the CPU-lowering artifact: XLA CPU converts
+                # bf16 dot operands to f32 (and hoists the converts out of
+                # the layer loop); the TPU MXU consumes bf16 natively, so on
+                # target these temps do not exist.  Audited against
+                # buffer-assignment dumps (EXPERIMENTS.md §Dry-run).
+                "bf16_arg_bytes": plan.bf16_arg_bytes(),
+            },
+            "cost": {
+                "flops": float(cost.get("flops", 0.0)),
+                "bytes_accessed": float(cost.get("bytes accessed", 0.0)),
+            },
+            "collectives": stats.summary(),
+        })
+    except Exception as exc:  # noqa: BLE001 — a failing cell is a bug report
+        record.update({"ok": False, "error": f"{type(exc).__name__}: {exc}",
+                       "traceback": traceback.format_exc()[-4000:]})
+    out_path.write_text(json.dumps(record, indent=2, default=str))
+    return record
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--mesh", default="both", choices=["single", "multi", "both"])
+    ap.add_argument("--force", action="store_true")
+    args = ap.parse_args()
+
+    meshes = {"single": ["single"], "multi": ["multi"],
+              "both": ["single", "multi"]}[args.mesh]
+    archs = [get_arch(args.arch)] if args.arch else all_archs()
+
+    failures = 0
+    for mesh_name in meshes:
+        for arch in archs:
+            shapes = [args.shape] if args.shape else list(arch.shapes)
+            for shape in shapes:
+                if shape not in arch.shapes:
+                    continue  # CLI filter names a shape of another family
+                if shape in arch.skips:
+                    print(f"[{mesh_name}] {arch.name} x {shape}: SKIP "
+                          f"({arch.skips[shape]})")
+                    continue
+                rec = run_cell(arch.name, shape, mesh_name, force=args.force)
+                if rec.get("ok"):
+                    c = rec["cost"]
+                    col = rec["collectives"]
+                    print(f"[{mesh_name}] {arch.name} x {shape}: OK "
+                          f"flops/chip={c['flops']:.3e} "
+                          f"hbm={c['bytes_accessed']:.3e} "
+                          f"coll={col['wire_bytes_per_chip']:.3e} "
+                          f"(lower {rec['lower_s']}s compile {rec['compile_s']}s)")
+                else:
+                    failures += 1
+                    print(f"[{mesh_name}] {arch.name} x {shape}: FAIL "
+                          f"{rec['error']}")
+    print(f"dry-run complete; {failures} failures")
+    return 1 if failures else 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

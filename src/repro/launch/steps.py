@@ -1,0 +1,484 @@
+"""Cell builder: (arch x shape x mesh) -> a lowerable step.
+
+For every grid cell this module assembles
+  * the step function (train_step / prefill / serve_step / retrieval),
+  * abstract arguments (ShapeDtypeStructs — nothing is allocated),
+  * in/out shardings,
+  * MODEL_FLOPS for the roofline's useful-FLOPs ratio.
+
+Conventions (DESIGN.md §6):
+  LM      batch over dp axes, TP/EP/SP over ``model``.
+  GNN     node/edge arrays sharded over ALL mesh axes (flattened); graph
+          sizes padded to multiples of 512 so both meshes divide evenly.
+  DLRM    batch over dp for the embedding stage (tables vocab-parallel over
+          ``model``), re-sharded over all axes for the dense stage.
+"""
+
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass, field
+from functools import partial
+from typing import Any, Callable, Mapping, Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from ..configs import get_arch
+from ..configs.base import ArchDef, ShapeSpec
+from ..distributed.sharding import ShardingPolicy, make_policy
+from ..models import dlrm as dlrm_lib
+from ..models import transformer as tf_lib
+from ..models.gnn import equiformer_v2 as eqv2_lib
+from ..models.gnn import gatedgcn as ggcn_lib
+from ..models.gnn import gcn as gcn_lib
+from ..models.gnn import meshgraphnet as mgn_lib
+from ..models.gnn.graph import GraphBatch
+from ..optim.optimizers import adamw
+
+Array = jax.Array
+
+PAD_TO = 512  # graph dims padded to multiples of this (divides both meshes)
+
+# Node-classification label cardinality per GNN shape (Cora / Reddit / OGBN-
+# products; molecule is graph-level).
+GNN_N_CLASSES = {"full_graph_sm": 7, "minibatch_lg": 41, "ogb_products": 47,
+                 "molecule": 10}
+
+
+def _pad(n: int, to: int = PAD_TO) -> int:
+    return ((n + to - 1) // to) * to
+
+
+def sampled_subgraph_sizes(batch_nodes: int, fanout: tuple[int, ...]) -> tuple[int, int]:
+    """Padded (nodes, edges) of a fanout-sampled k-hop subgraph."""
+    nodes, edges, frontier = batch_nodes, 0, batch_nodes
+    for f in fanout:
+        edges += frontier * f
+        frontier *= f
+        nodes += frontier
+    return _pad(nodes), _pad(edges)
+
+
+@dataclass
+class CellPlan:
+    arch: str
+    shape: str
+    kind: str
+    step_fn: Callable
+    args: tuple                       # ShapeDtypeStructs pytree
+    in_shardings: Any
+    out_shardings: Any
+    model_flops: float
+    donate_argnums: tuple = ()        # train: (params, opt); decode: (cache,)
+    meta: dict = field(default_factory=dict)
+
+    def lower(self, mesh: Mesh):
+        # All shardings are NamedShardings carrying the mesh; no context
+        # manager is required.
+        del mesh
+        jitted = jax.jit(self.step_fn, in_shardings=self.in_shardings,
+                         out_shardings=self.out_shardings,
+                         donate_argnums=self.donate_argnums)
+        return jitted.lower(*self.args)
+
+    def bf16_arg_bytes(self) -> int:
+        """PER-DEVICE bf16 input bytes — bounds the CPU-backend f32-convert
+        artifact (XLA CPU converts bf16 dot operands to f32 and hoists the
+        converts; it also materializes f32 copies of bf16 optimizer moments.
+        TPU MXUs consume bf16 natively and fuse the moment math, so these
+        temps vanish on target).  Audited against buffer-assignment dumps;
+        see EXPERIMENTS.md §Dry-run."""
+        total = 0
+        leaves = jax.tree_util.tree_leaves(self.args)
+        sh_leaves = jax.tree_util.tree_flatten(
+            self.in_shardings, is_leaf=lambda x: hasattr(x, "spec"))[0]
+        for leaf, sh in zip(leaves, sh_leaves):
+            if getattr(leaf, "dtype", None) == jnp.bfloat16:
+                shape = (sh.shard_shape(leaf.shape)
+                         if hasattr(sh, "shard_shape") else leaf.shape)
+                n = 1
+                for d in shape:
+                    n *= d
+                total += n * 2
+        return total
+
+
+def _named(policy: ShardingPolicy, tree, spec_tree):
+    return jax.tree_util.tree_map(
+        lambda s: NamedSharding(policy.mesh, s), spec_tree,
+        is_leaf=lambda x: isinstance(x, P))
+
+
+def _abstract_opt_state(optimizer, params_abs):
+    return jax.eval_shape(optimizer.init, params_abs)
+
+
+def _opt_state_specs(param_specs):
+    from ..optim.optimizers import AdamWState
+    return AdamWState(step=P(), mu=param_specs, nu=param_specs)
+
+
+# ---------------------------------------------------------------------------
+# LM cells
+# ---------------------------------------------------------------------------
+
+def _lm_plan(arch: ArchDef, shape: ShapeSpec, policy: ShardingPolicy) -> CellPlan:
+    from ..distributed.sharding import fsdp_specs
+
+    cfg: tf_lib.TransformerConfig = arch.make_config()
+    B, S = shape.params["batch"], shape.params["seq"]
+    dp = policy.dp_spec
+    n_active = cfg.active_param_count()
+
+    # Storage-precision policy (dry-run memory iteration, EXPERIMENTS.md):
+    #  - training params/opt state f32 unless the f32 triple exceeds ~60% of
+    #    the pod's HBM (arctic-480b) -> bf16 params + bf16 moments;
+    #  - serving params always bf16.
+    n_params = cfg.param_count()
+    f32_train_bytes = 12.0 * n_params / policy.n_devices
+    big = f32_train_bytes > 9e9
+    train_dtype = jnp.bfloat16 if big else jnp.float32
+
+    if shape.kind == "train":
+        params_abs = tf_lib.abstract_params(cfg, dtype=train_dtype)
+        # FSDP/ZeRO-3: shard every large leaf over the dp axes too.
+        param_specs = fsdp_specs(params_abs, tf_lib.param_pspecs(cfg, policy),
+                                 policy)
+        optimizer = adamw(3e-4, weight_decay=0.1,
+                          state_dtype=jnp.bfloat16 if big else jnp.float32)
+        opt_abs = _abstract_opt_state(optimizer, params_abs)
+        step = tf_lib.make_train_step(cfg, optimizer, policy=policy)
+        batch_abs = {"tokens": jax.ShapeDtypeStruct((B, S), jnp.int32),
+                     "labels": jax.ShapeDtypeStruct((B, S), jnp.int32)}
+        batch_specs = {"tokens": P(dp, None), "labels": P(dp, None)}
+        in_sh = (_named(policy, params_abs, param_specs),
+                 _named(policy, opt_abs, _opt_state_specs(param_specs)),
+                 _named(policy, batch_abs, batch_specs))
+        out_sh = (in_sh[0], in_sh[1],
+                  {"loss": NamedSharding(policy.mesh, P()),
+                   "ce": NamedSharding(policy.mesh, P()),
+                   "aux": NamedSharding(policy.mesh, P())})
+        flops = 6.0 * n_active * B * S
+        return CellPlan(arch.name, shape.name, "train", step,
+                        (params_abs, opt_abs, batch_abs), in_sh, out_sh, flops,
+                        donate_argnums=(0, 1),
+                        meta={"loop_scale": cfg.n_groups})
+
+    # Serving: bf16 params; FSDP-shard them over dp too when a TP-only
+    # shard would exceed half the HBM (arctic: 58 GB/chip otherwise).
+    params_abs = tf_lib.abstract_params(cfg, dtype=jnp.bfloat16)
+    param_specs = tf_lib.param_pspecs(cfg, policy)
+    if 2.0 * n_params / policy.tp > 8e9:
+        param_specs = fsdp_specs(params_abs, param_specs, policy)
+
+    if shape.kind == "prefill":
+        step = tf_lib.make_prefill_step(cfg, policy=policy)
+        tokens = jax.ShapeDtypeStruct((B, S), jnp.int32)
+        in_sh = (_named(policy, params_abs, param_specs),
+                 NamedSharding(policy.mesh, P(dp, None)))
+        flops = 2.0 * n_active * B * S
+        return CellPlan(arch.name, shape.name, "prefill", step,
+                        (params_abs, tokens), in_sh, None, flops,
+                        meta={"loop_scale": cfg.n_groups})
+
+    # decode
+    long_ctx = S >= 2 ** 19
+    decode = tf_lib.DecodePolicy(
+        cache_seq_axes=("data", "model") if long_ctx else ("model",),
+        batch_axes=() if B < policy.dp else tuple(policy.dp_axes))
+    step = tf_lib.make_serve_step(cfg, S, policy=policy, decode=decode)
+    cache_abs = tf_lib.abstract_cache(cfg, B, S)
+    cache_specs = tf_lib.cache_pspecs(cfg, policy, decode)
+    bat = decode.batch_axes if len(decode.batch_axes) > 1 else (
+        decode.batch_axes[0] if decode.batch_axes else None)
+    tokens = jax.ShapeDtypeStruct((B, 1), jnp.int32)
+    pos = jax.ShapeDtypeStruct((), jnp.int32)
+    in_sh = (_named(policy, params_abs, param_specs),
+             _named(policy, cache_abs, cache_specs),
+             NamedSharding(policy.mesh, P(bat, None)),
+             NamedSharding(policy.mesh, P()))
+    out_sh = (NamedSharding(policy.mesh, P(bat, None)),
+              _named(policy, cache_abs, cache_specs))
+    flops = 2.0 * n_active * B
+    return CellPlan(arch.name, shape.name, "decode", step,
+                    (params_abs, cache_abs, tokens, pos), in_sh, out_sh, flops,
+                    donate_argnums=(1,),
+                    meta={"cache_seq_axes": decode.cache_seq_axes,
+                          "loop_scale": cfg.n_groups})
+
+
+# ---------------------------------------------------------------------------
+# GNN cells
+# ---------------------------------------------------------------------------
+
+def _wigner_abstract(cfg: eqv2_lib.EquiformerV2Config, E: int) -> dict:
+    """Pre-chunked when the conv is edge-tiled (the chunk dim must be a real
+    input dim — in-model reshapes of sharded edge arrays force replication)."""
+    out = {}
+    chunks = max(getattr(cfg, "edge_chunks", 1), 1)
+    for l in range(cfg.l_max + 1):
+        shape = ((chunks, E // chunks, cfg.m_dim(l), 2 * l + 1)
+                 if chunks > 1 else (E, cfg.m_dim(l), 2 * l + 1))
+        out[l] = jax.ShapeDtypeStruct(shape, jnp.float32)
+    return out
+
+
+def _gnn_graph_abstract(arch: ArchDef, shape: ShapeSpec, cfg) -> tuple[GraphBatch, dict]:
+    p = shape.params
+    if shape.kind == "train_sampled":
+        N, E = sampled_subgraph_sizes(p["batch_nodes"], tuple(p["fanout"]))
+    else:
+        N, E = _pad(p["n_nodes"] * p.get("batch", 1)), _pad(p["n_edges"] * p.get("batch", 1))
+    if getattr(cfg, "edge_chunks", 1) > 1:
+        # chunked edge arrays are (chunks, Ec, ...) with Ec sharded over the
+        # dp axes: Ec must divide by 32 (multi-pod dp) -> pad E to 64*32.
+        E = _pad(E, cfg.edge_chunks * 32)
+    d_feat = p["d_feat"]
+    molecule = shape.name == "molecule"
+    n_graphs = p.get("batch", 1)
+
+    f32 = lambda *s: jax.ShapeDtypeStruct(s, jnp.float32)
+    i32 = lambda *s: jax.ShapeDtypeStruct(s, jnp.int32)
+
+    kw: dict[str, Any] = dict(
+        node_feat=f32(N, d_feat),
+        senders=i32(E), receivers=i32(E),
+        node_mask=f32(N), edge_mask=f32(E),
+        n_graphs=n_graphs if molecule else 1,
+    )
+    if molecule:
+        kw["graph_ids"] = i32(N)
+
+    name = arch.name
+    if name == "gcn-cora":
+        kw["labels"] = i32(n_graphs) if molecule else i32(N)
+    elif name == "gatedgcn":
+        kw["edge_feat"] = f32(E, cfg.d_edge_in)
+        kw["labels"] = i32(n_graphs) if molecule else i32(N)
+    elif name == "meshgraphnet":
+        kw["edge_feat"] = f32(E, cfg.d_edge_in)
+        kw["labels"] = f32(N, cfg.d_out)
+    elif name == "equiformer-v2":
+        kw["wigner"] = _wigner_abstract(cfg, E)
+        kw["labels"] = f32(n_graphs if molecule else 1, cfg.d_out)
+        kw["positions"] = f32(N, 3)
+    return GraphBatch(**kw), {"N": N, "E": E}
+
+
+def _gnn_graph_specs(arch: ArchDef, g: GraphBatch, policy: ShardingPolicy,
+                     shape: ShapeSpec) -> GraphBatch:
+    # 2-D partitioning for the wide models (meshgraphnet d=128, equiformer
+    # C=128): nodes/edges over the dp axes, hidden channels over `model`
+    # (applied inside the models via policy constraints).  The narrow models
+    # (gcn d=16, gatedgcn d=70) shard nodes/edges over ALL axes instead.
+    if arch.name in ("meshgraphnet", "equiformer-v2"):
+        axes = policy.dp_spec
+    else:
+        axes = tuple(policy.dp_axes) + (policy.tp_axis,)
+    node = P(axes)
+    kw: dict[str, Any] = dict(
+        node_feat=P(axes, None), senders=node, receivers=node,
+        node_mask=node, edge_mask=node, n_graphs=g.n_graphs)
+    if g.graph_ids is not None:
+        kw["graph_ids"] = node
+    if g.edge_feat is not None:
+        kw["edge_feat"] = P(axes, None)
+    if g.wigner is not None:
+        kw["wigner"] = {
+            l: (P(None, axes, None, None) if w.ndim == 4
+                else P(axes, None, None))
+            for l, w in g.wigner.items()}
+    if g.positions is not None:
+        kw["positions"] = P(axes, None)
+    lbl = g.labels
+    if lbl.shape[0] == g.node_feat.shape[0]:
+        kw["labels"] = P(axes) if lbl.ndim == 1 else P(axes, None)
+    else:
+        kw["labels"] = P() if lbl.ndim == 1 else P(*([None] * lbl.ndim))
+    return GraphBatch(**kw)
+
+
+_GNN_MODULES = {"gcn-cora": gcn_lib, "gatedgcn": ggcn_lib,
+                "meshgraphnet": mgn_lib, "equiformer-v2": eqv2_lib}
+
+
+def _gnn_flops(arch: ArchDef, cfg, N: int, E: int) -> float:
+    """Documented forward-FLOPs estimates; train = 3x forward."""
+    if arch.name == "gcn-cora":
+        dims = [cfg.d_in] + [cfg.d_hidden] * (cfg.n_layers - 1) + [cfg.n_classes]
+        fwd = sum(2.0 * N * a * b + 2.0 * E * b
+                  for a, b in zip(dims[:-1], dims[1:]))
+    elif arch.name == "gatedgcn":
+        d = cfg.d_hidden
+        fwd = cfg.n_layers * (2.0 * N * 5 * d * d + 2.0 * E * 5 * d)
+        fwd += 2.0 * N * cfg.d_in * d + 2.0 * E * cfg.d_edge_in * d
+    elif arch.name == "meshgraphnet":
+        d = cfg.d_hidden
+        per = 2.0 * E * (3 * d * d + d * d) + 2.0 * N * (2 * d * d + d * d)
+        fwd = cfg.n_layers * per + 2.0 * N * (cfg.d_in * d + d * d) \
+            + 2.0 * E * (cfg.d_edge_in * d + d * d)
+    else:  # equiformer-v2
+        C = cfg.d_hidden
+        rot = sum(cfg.m_dim(l) * (2 * l + 1) for l in range(cfg.l_max + 1)) * C
+        n0 = (cfg.l_max + 1) * C
+        so2 = n0 ** 2 + 2 * sum((len(cfg.ls_for_m(m)) * C) ** 2
+                                for m in range(1, cfg.m_max + 1))
+        fwd = cfg.n_layers * (2.0 * E * (2 * rot + so2) + 2.0 * N * 4 * C * C)
+    return 3.0 * fwd
+
+
+def _gnn_plan(arch: ArchDef, shape: ShapeSpec, policy: ShardingPolicy) -> CellPlan:
+    p = dict(shape.params)
+    mk: dict[str, Any] = {"d_in": p["d_feat"]}
+    if arch.name in ("gcn-cora", "gatedgcn"):
+        mk["n_classes"] = GNN_N_CLASSES[shape.name]
+        if shape.name == "molecule":
+            mk["readout"] = "graphs"
+    if arch.name == "equiformer-v2":
+        # Edge tiling for the eSCN conv (the paper's P-per-tile parameter):
+        # 64 chunks bound the per-device message tensor on the 61M-edge
+        # shapes; small graphs stay single-tile.
+        n_e = (sampled_subgraph_sizes(p["batch_nodes"], tuple(p["fanout"]))[1]
+               if shape.kind == "train_sampled"
+               else _pad(p["n_edges"] * p.get("batch", 1)))
+        if n_e >= 1_000_000:
+            mk["edge_chunks"] = 64
+    cfg = arch.make_config(**mk)
+    module = _GNN_MODULES[arch.name]
+
+    g_abs, sizes = _gnn_graph_abstract(arch, shape, cfg)
+    g_specs = _gnn_graph_specs(arch, g_abs, policy, shape)
+    params_abs = jax.eval_shape(lambda k: module.init_params(cfg, k),
+                                jax.random.key(0))
+    param_specs = jax.tree_util.tree_map(lambda _: P(), params_abs)
+    optimizer = adamw(1e-3)
+    opt_abs = _abstract_opt_state(optimizer, params_abs)
+    opt_specs = _opt_state_specs(param_specs)
+
+    def train_step(params, opt_state, g):
+        (loss, metrics), grads = jax.value_and_grad(
+            lambda q: module.loss_fn(cfg, q, g, policy=policy),
+            has_aux=True)(params)
+        updates, opt_state = optimizer.update(grads, opt_state, params)
+        from ..optim.optimizers import apply_updates
+        params = apply_updates(params, updates)
+        return params, opt_state, metrics
+
+    in_sh = (_named(policy, params_abs, param_specs),
+             _named(policy, opt_abs, opt_specs),
+             _named(policy, g_abs, g_specs))
+    flops = _gnn_flops(arch, cfg, sizes["N"], sizes["E"])
+    # Loop-body accounting: gcn's 2 layers are a Python loop (fully counted);
+    # the scanned models count one layer body; equiformer additionally scans
+    # edge chunks inside the body.
+    if arch.name == "gcn-cora":
+        scale = 1
+    elif arch.name == "equiformer-v2":
+        scale = cfg.n_layers  # edge-chunk inner scan undercount documented
+    else:
+        scale = cfg.n_layers
+    sizes["loop_scale"] = scale
+    return CellPlan(arch.name, shape.name, "train", train_step,
+                    (params_abs, opt_abs, g_abs), in_sh, None, flops,
+                    donate_argnums=(0, 1), meta=sizes)
+
+
+# ---------------------------------------------------------------------------
+# DLRM cells
+# ---------------------------------------------------------------------------
+
+def _dlrm_flops(cfg: dlrm_lib.DLRMConfig, B: int, *, train: bool) -> float:
+    bot = sum(2.0 * a * b for a, b in zip((cfg.n_dense,) + cfg.bot_mlp[:-1],
+                                          cfg.bot_mlp))
+    top_dims = (cfg.interaction_dim(),) + cfg.top_mlp
+    top = sum(2.0 * a * b for a, b in zip(top_dims[:-1], top_dims[1:]))
+    f = cfg.n_sparse + 1
+    inter = 2.0 * f * f * cfg.embed_dim
+    fwd = B * (bot + top + inter)
+    return 3.0 * fwd if train else fwd
+
+
+def _dlrm_plan(arch: ArchDef, shape: ShapeSpec, policy: ShardingPolicy) -> CellPlan:
+    cfg: dlrm_lib.DLRMConfig = arch.make_config()
+    B = shape.params["batch"]
+    dp = policy.dp_spec
+    params_abs = dlrm_lib.abstract_params(cfg)
+    param_specs = dlrm_lib.param_pspecs(cfg, policy)
+
+    if shape.kind == "retrieval":
+        Nc = _pad(shape.params["n_candidates"])
+        axes = tuple(policy.dp_axes) + (policy.tp_axis,)
+
+        def retrieve(params, query, candidates):
+            scores = dlrm_lib.score_candidates(cfg, params, query, candidates)
+            return jax.lax.top_k(scores, 128)
+
+        args = (params_abs,
+                {"dense": jax.ShapeDtypeStruct((1, cfg.n_dense), jnp.float32)},
+                jax.ShapeDtypeStruct((Nc, cfg.embed_dim), jnp.float32))
+        in_sh = (_named(policy, params_abs, param_specs),
+                 {"dense": NamedSharding(policy.mesh, P(None, None))},
+                 NamedSharding(policy.mesh, P(axes, None)))
+        return CellPlan(arch.name, shape.name, "retrieval", retrieve, args,
+                        in_sh, None, 2.0 * Nc * cfg.embed_dim,
+                        meta={"n_candidates": Nc})
+
+    batch_abs = {
+        "dense": jax.ShapeDtypeStruct((B, cfg.n_dense), jnp.float32),
+        "sparse": jax.ShapeDtypeStruct((B, cfg.n_sparse, cfg.multi_hot), jnp.int32),
+        "labels": jax.ShapeDtypeStruct((B,), jnp.int32),
+    }
+    batch_specs = {"dense": P(dp, None), "sparse": P(dp, None, None),
+                   "labels": P(dp)}
+
+    if shape.kind == "train":
+        optimizer = adamw(1e-3)
+        opt_abs = _abstract_opt_state(optimizer, params_abs)
+
+        def train_step(params, opt_state, batch):
+            (loss, metrics), grads = jax.value_and_grad(
+                lambda q: dlrm_lib.loss_fn(cfg, q, batch, policy=policy),
+                has_aux=True)(params)
+            updates, opt_state = optimizer.update(grads, opt_state, params)
+            from ..optim.optimizers import apply_updates
+            params = apply_updates(params, updates)
+            return params, opt_state, metrics
+
+        in_sh = (_named(policy, params_abs, param_specs),
+                 _named(policy, opt_abs, _opt_state_specs(param_specs)),
+                 _named(policy, batch_abs, batch_specs))
+        return CellPlan(arch.name, shape.name, "train", train_step,
+                        (params_abs, opt_abs, batch_abs), in_sh, None,
+                        _dlrm_flops(cfg, B, train=True), donate_argnums=(0, 1))
+
+    def serve(params, batch):
+        return dlrm_lib.forward(cfg, params, batch, policy=policy)
+
+    in_sh = (_named(policy, params_abs, param_specs),
+             _named(policy, batch_abs, batch_specs))
+    return CellPlan(arch.name, shape.name, "serve", serve,
+                    (params_abs, batch_abs), in_sh, None,
+                    _dlrm_flops(cfg, B, train=False))
+
+
+# ---------------------------------------------------------------------------
+# Entry point
+# ---------------------------------------------------------------------------
+
+def build_cell(arch_name: str, shape_name: str, mesh: Mesh,
+               **policy_kw) -> CellPlan:
+    arch = get_arch(arch_name)
+    if shape_name in arch.skips:
+        raise ValueError(f"cell ({arch_name}, {shape_name}) is skipped: "
+                         f"{arch.skips[shape_name]}")
+    shape = arch.shapes[shape_name]
+    policy = make_policy(mesh, **policy_kw)
+    if arch.family == "lm":
+        return _lm_plan(arch, shape, policy)
+    if arch.family == "gnn":
+        return _gnn_plan(arch, shape, policy)
+    if arch.family == "recsys":
+        return _dlrm_plan(arch, shape, policy)
+    raise ValueError(arch.family)

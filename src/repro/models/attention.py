@@ -1,0 +1,171 @@
+"""Attention primitives: chunked (flash-style) training attention and
+sequence-sharded decode attention.
+
+Training/prefill attention is computed as a ``lax.scan`` over query chunks so
+the materialized score block is ``(B, H, q_chunk, S)`` rather than
+``(B, H, S, S)`` — the HLO-level analogue of the Pallas flash kernel in
+:mod:`repro.kernels.flash_attention` (which replaces this path on real TPU
+hardware via ``repro.kernels.ops``).
+
+Decode attention supports a KV cache sequence-sharded over the ``model`` mesh
+axis (flash-decoding style): each shard computes a partial softmax over its
+chunk and the partials combine with a logsumexp reduction — a psum of
+``(B, H, d+2)`` instead of an all-gather of the cache.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from .common import softcap
+
+Array = jax.Array
+
+_NEG_INF = -1e30
+
+
+def _mask_value(scores_dtype):
+    return jnp.asarray(_NEG_INF, scores_dtype)
+
+
+def repeat_kv(x: Array, n_rep: int) -> Array:
+    """(B, S, Hk, D) -> (B, S, Hk * n_rep, D) for GQA."""
+    if n_rep == 1:
+        return x
+    b, s, hk, d = x.shape
+    return jnp.broadcast_to(x[:, :, :, None, :], (b, s, hk, n_rep, d)).reshape(
+        b, s, hk * n_rep, d)
+
+
+def chunked_causal_attention(
+    q: Array,                 # (B, Sq, H, D)
+    k: Array,                 # (B, Skv, Hk, D)
+    v: Array,                 # (B, Skv, Hk, D)
+    *,
+    window: Optional[int] = None,      # sliding window; None = global causal
+    attn_softcap: Optional[float] = None,
+    q_chunk: int = 1024,
+    q_offset: Array | int = 0,         # global position of q row 0 (context parallelism)
+    shard_divisor: int = 1,            # how many ways B*H is sharded (budget calc)
+    score_budget_bytes: int = 1 << 29, # cap per-device fp32 score block (512 MiB)
+) -> Array:
+    """Causal (optionally sliding-window) attention, scanned over Q chunks.
+
+    The chunk size adapts so the per-device fp32 score block
+    (B*H/shard_divisor, q_chunk, S_kv) stays under ``score_budget_bytes`` —
+    the dry-run memory gate found 7.5 GB score blocks at 32k context
+    otherwise (EXPERIMENTS.md §Dry-run iteration 1)."""
+    b, s, h, d = q.shape
+    s_kv = k.shape[1]
+    hk = k.shape[2]
+    n_rep = h // hk
+    k = repeat_kv(k, n_rep)
+    v = repeat_kv(v, n_rep)
+    scale = d ** -0.5
+
+    q_chunk = min(q_chunk, s)
+    per_row_bytes = max(b * h // max(shard_divisor, 1), 1) * s_kv * 4
+    while q_chunk > 16 and q_chunk * per_row_bytes > score_budget_bytes \
+            and s % (q_chunk // 2) == 0:
+        q_chunk //= 2
+    if s % q_chunk:
+        q_chunk = s  # fallback: irregular sizes take the single-block path
+    n_chunks = s // q_chunk
+
+    kt = k.transpose(0, 2, 3, 1)      # (B, H, D, Skv)
+    vt = v.transpose(0, 2, 1, 3)      # (B, H, Skv, D)
+    qs = q.transpose(0, 2, 1, 3).reshape(b, h, n_chunks, q_chunk, d)
+    qs = qs.transpose(2, 0, 1, 3, 4)  # (n_chunks, B, H, qc, D)
+
+    kv_pos = jnp.arange(s_kv, dtype=jnp.int32)
+
+    def one_chunk(ci: Array, qc: Array) -> Array:
+        q_pos = q_offset + ci * q_chunk + jnp.arange(q_chunk, dtype=jnp.int32)
+        scores = jnp.einsum("bhqd,bhdk->bhqk", qc.astype(jnp.float32) * scale,
+                            kt.astype(jnp.float32))
+        if attn_softcap is not None:
+            scores = softcap(scores, attn_softcap)
+        causal = kv_pos[None, :] <= q_pos[:, None]
+        if window is not None:
+            causal &= (q_pos[:, None] - kv_pos[None, :]) < window
+        scores = jnp.where(causal[None, None], scores, _mask_value(scores.dtype))
+        probs = jax.nn.softmax(scores, axis=-1)
+        return jnp.einsum("bhqk,bhkd->bhqd", probs, vt.astype(jnp.float32))
+
+    # Per-chunk remat: without it the backward pass stores every chunk's
+    # (B, H, qc, S_kv) fp32 score block stacked — 14 GB/layer at arctic's
+    # train_4k shape (dry-run audit, EXPERIMENTS.md §Dry-run iteration 2).
+    chunk_fn = jax.checkpoint(one_chunk,
+                              policy=jax.checkpoint_policies.nothing_saveable)
+    if n_chunks == 1:
+        out = chunk_fn(jnp.asarray(0, jnp.int32), qs[0])[None]
+    else:
+        out = jax.lax.map(lambda args: chunk_fn(*args),
+                          (jnp.arange(n_chunks, dtype=jnp.int32), qs))
+    # (n_chunks, B, H, qc, D) -> (B, S, H, D)
+    out = out.transpose(1, 0, 3, 2, 4).reshape(b, s, h, d)
+    return out.astype(q.dtype)
+
+
+def decode_attention(
+    q: Array,            # (B, 1, H, D)
+    k_cache: Array,      # (B, S, Hk, D)
+    v_cache: Array,      # (B, S, Hk, D)
+    *,
+    length_mask: Array,  # (B, S) bool — True where the cache slot is valid
+    attn_softcap: Optional[float] = None,
+) -> Array:
+    """Single-token attention over a (local) KV cache."""
+    b, _, h, d = q.shape
+    hk = k_cache.shape[2]
+    k = repeat_kv(k_cache, h // hk).astype(jnp.float32)
+    v = repeat_kv(v_cache, h // hk).astype(jnp.float32)
+    scores = jnp.einsum("bqhd,bshd->bhqs", q.astype(jnp.float32) * d ** -0.5, k)
+    if attn_softcap is not None:
+        scores = softcap(scores, attn_softcap)
+    scores = jnp.where(length_mask[:, None, None, :], scores,
+                       _mask_value(scores.dtype))
+    probs = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bhqs,bshd->bqhd", probs, v)
+    return out.astype(q.dtype)
+
+
+def decode_attention_partial(
+    q: Array, k_shard: Array, v_shard: Array, *,
+    length_mask: Array, attn_softcap: Optional[float] = None,
+) -> tuple[Array, Array, Array]:
+    """Partial-softmax statistics over one sequence shard of the cache.
+
+    Returns (weighted_values (B,1,H,D), max (B,H,1), sumexp (B,H,1)) so that
+    shards combine associatively — the flash-decoding split-K scheme.
+    """
+    b, _, h, d = q.shape
+    hk = k_shard.shape[2]
+    k = repeat_kv(k_shard, h // hk).astype(jnp.float32)
+    v = repeat_kv(v_shard, h // hk).astype(jnp.float32)
+    scores = jnp.einsum("bqhd,bshd->bhqs", q.astype(jnp.float32) * d ** -0.5, k)
+    if attn_softcap is not None:
+        scores = softcap(scores, attn_softcap)
+    scores = jnp.where(length_mask[:, None, None, :], scores,
+                       _mask_value(scores.dtype))
+    m = jnp.max(scores, axis=-1)                        # (B,H,1)
+    e = jnp.exp(scores - m[..., None])
+    z = jnp.sum(e, axis=-1)                             # (B,H,1)
+    wv = jnp.einsum("bhqs,bshd->bqhd", e, v)            # un-normalized
+    return wv, m, z
+
+
+def combine_decode_partials(wv: Array, m: Array, z: Array, axis_name: str) -> Array:
+    """psum-combine flash-decoding partials across ``axis_name`` shards."""
+    g_max = jax.lax.pmax(m, axis_name)                  # (B,H,1)
+    corr = jnp.exp(m - g_max)                           # (B,H,1)
+    wv = wv * corr.transpose(0, 2, 1)[..., None]        # (B,1,H,D)
+    z = z * corr
+    wv = jax.lax.psum(wv, axis_name)
+    z = jax.lax.psum(z, axis_name)
+    return wv / z.transpose(0, 2, 1)[..., None]

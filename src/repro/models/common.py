@@ -1,0 +1,156 @@
+"""Shared functional building blocks for the model zoo.
+
+Everything is pure-functional: parameters are pytrees of ``jnp`` arrays,
+built by ``init_*`` helpers and consumed by stateless apply functions.  No
+framework dependency (flax/haiku are not installed) — the structure mirrors
+what a production JAX stack keeps under its own control anyway: explicit
+parameter trees shard cleanly under pjit and checkpoint trivially.
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Sequence
+
+import jax
+import jax.numpy as jnp
+
+__all__ = [
+    "Initializer", "dense_init", "he_init", "embed_init",
+    "rms_norm", "layer_norm", "mlp_init", "mlp_apply",
+    "rope_freqs", "apply_rope", "softcap",
+    "segment_softmax", "cross_entropy_loss", "count_params",
+]
+
+Array = jax.Array
+
+
+# ---------------------------------------------------------------------------
+# Initializers
+# ---------------------------------------------------------------------------
+
+def dense_init(rng: Array, shape: Sequence[int], *, fan_in: int | None = None,
+               dtype=jnp.float32) -> Array:
+    """LeCun-normal: the default for matmul weights."""
+    fan = fan_in if fan_in is not None else shape[-2] if len(shape) >= 2 else shape[-1]
+    std = 1.0 / math.sqrt(max(fan, 1))
+    return (jax.random.normal(rng, tuple(shape)) * std).astype(dtype)
+
+
+def he_init(rng: Array, shape: Sequence[int], *, fan_in: int | None = None,
+            dtype=jnp.float32) -> Array:
+    fan = fan_in if fan_in is not None else shape[-2] if len(shape) >= 2 else shape[-1]
+    std = math.sqrt(2.0 / max(fan, 1))
+    return (jax.random.normal(rng, tuple(shape)) * std).astype(dtype)
+
+
+def embed_init(rng: Array, shape: Sequence[int], *, dtype=jnp.float32) -> Array:
+    return (jax.random.normal(rng, tuple(shape)) * 0.02).astype(dtype)
+
+
+Initializer = dense_init
+
+
+# ---------------------------------------------------------------------------
+# Norms / activations
+# ---------------------------------------------------------------------------
+
+def rms_norm(x: Array, scale: Array, *, eps: float = 1e-6) -> Array:
+    dtype = x.dtype
+    x = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(x), axis=-1, keepdims=True)
+    y = x * jax.lax.rsqrt(var + eps) * (1.0 + scale.astype(jnp.float32))
+    return y.astype(dtype)
+
+
+def layer_norm(x: Array, scale: Array, bias: Array, *, eps: float = 1e-5) -> Array:
+    dtype = x.dtype
+    x = x.astype(jnp.float32)
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.mean(jnp.square(x - mu), axis=-1, keepdims=True)
+    y = (x - mu) * jax.lax.rsqrt(var + eps)
+    y = y * scale.astype(jnp.float32) + bias.astype(jnp.float32)
+    return y.astype(dtype)
+
+
+def softcap(x: Array, cap: float) -> Array:
+    """Gemma-2 logit soft-capping: cap * tanh(x / cap)."""
+    return cap * jnp.tanh(x / cap)
+
+
+# ---------------------------------------------------------------------------
+# Generic MLP (used by GNN/DLRM substrates)
+# ---------------------------------------------------------------------------
+
+def mlp_init(rng: Array, dims: Sequence[int], *, layer_norm_out: bool = False,
+             dtype=jnp.float32) -> dict:
+    keys = jax.random.split(rng, len(dims) - 1)
+    params = {
+        "w": [he_init(k, (a, b), dtype=dtype) for k, a, b in zip(keys, dims[:-1], dims[1:])],
+        "b": [jnp.zeros((b,), dtype) for b in dims[1:]],
+    }
+    if layer_norm_out:
+        params["ln_scale"] = jnp.ones((dims[-1],), dtype)
+        params["ln_bias"] = jnp.zeros((dims[-1],), dtype)
+    return params
+
+
+def mlp_apply(params: dict, x: Array, *, act=jax.nn.relu,
+              final_act: bool = False) -> Array:
+    n = len(params["w"])
+    for i, (w, b) in enumerate(zip(params["w"], params["b"])):
+        x = x @ w + b
+        if i < n - 1 or final_act:
+            x = act(x)
+    if "ln_scale" in params:
+        x = layer_norm(x, params["ln_scale"], params["ln_bias"])
+    return x
+
+
+# ---------------------------------------------------------------------------
+# Rotary position embeddings
+# ---------------------------------------------------------------------------
+
+def rope_freqs(d_head: int, *, theta: float = 10000.0) -> Array:
+    return 1.0 / (theta ** (jnp.arange(0, d_head, 2, dtype=jnp.float32) / d_head))
+
+
+def apply_rope(x: Array, positions: Array, freqs: Array) -> Array:
+    """x: (..., seq, heads, d_head); positions: (..., seq)."""
+    angles = positions[..., :, None, None].astype(jnp.float32) * freqs  # (..., S, 1, d/2)
+    cos, sin = jnp.cos(angles), jnp.sin(angles)
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Segment ops / losses
+# ---------------------------------------------------------------------------
+
+def segment_softmax(logits: Array, segment_ids: Array, num_segments: int) -> Array:
+    """Numerically-stable softmax over variable-size segments (edge softmax)."""
+    seg_max = jax.ops.segment_max(logits, segment_ids, num_segments=num_segments)
+    seg_max = jnp.where(jnp.isfinite(seg_max), seg_max, 0.0)
+    shifted = logits - seg_max[segment_ids]
+    expd = jnp.exp(shifted)
+    seg_sum = jax.ops.segment_sum(expd, segment_ids, num_segments=num_segments)
+    return expd / (seg_sum[segment_ids] + 1e-9)
+
+
+def cross_entropy_loss(logits: Array, labels: Array, *, mask: Array | None = None) -> Array:
+    """Token-level CE in fp32; shards cleanly with vocab-partitioned logits
+    (XLA turns the reductions into psums over the model axis)."""
+    logits = logits.astype(jnp.float32)
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
+    nll = logz - gold
+    if mask is not None:
+        nll = nll * mask
+        return jnp.sum(nll) / jnp.maximum(jnp.sum(mask), 1.0)
+    return jnp.mean(nll)
+
+
+def count_params(tree) -> int:
+    return sum(int(x.size) for x in jax.tree_util.tree_leaves(tree)
+               if hasattr(x, "size"))

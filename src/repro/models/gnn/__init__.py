@@ -1,0 +1,6 @@
+"""GNN family: GCN, GatedGCN, MeshGraphNet, EquiformerV2 (eSCN)."""
+
+from . import gcn, gatedgcn, meshgraphnet, equiformer_v2
+from .graph import GraphBatch
+
+__all__ = ["gcn", "gatedgcn", "meshgraphnet", "equiformer_v2", "GraphBatch"]

@@ -1,0 +1,273 @@
+"""EquiformerV2-style equivariant graph attention via eSCN SO(2) convolutions
+(Liao et al., arXiv:2306.12059; eSCN trick from Passaro & Zitnick).
+
+Irrep features are packed (N, (l_max+1)^2, C).  Each edge rotates the source
+features so the edge vector aligns with +z (per-edge real-Wigner blocks are
+*data*, produced host-side by :mod:`repro.data.wigner`), applies an
+SO(2)-equivariant linear map restricted to |m| <= m_max — this is the
+O(L^6) -> O(L^3) reduction that defines eSCN — un-rotates, weighs by graph
+attention (from the invariant l=0 channel), and scatter-sums to receivers.
+
+Faithful elements: irrep feature algebra, m-restricted SO(2) complex
+structure (commutes with the residual z-gauge, so outputs are exactly
+equivariant), attention from invariants, equivariant RMS-norm and gated
+nonlinearity.  Simplified vs the reference: no S2-grid pointwise activation
+and a plain invariant FFN on l=0 (DESIGN.md records this).
+
+Data contract: edges must have NON-ZERO edge vectors — self-loops have no
+defined edge frame and break equivariance (the reference models likewise
+build radius graphs without self-loops).  Padding edges must carry
+``edge_mask = 0`` so their (arbitrary) Wigner blocks never contribute.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+
+from ..common import dense_init, mlp_apply, mlp_init, segment_softmax
+from .graph import GraphBatch
+
+Array = jax.Array
+
+
+@dataclass(frozen=True)
+class EquiformerV2Config:
+    name: str = "equiformer-v2"
+    n_layers: int = 12
+    d_hidden: int = 128           # channels per irrep degree
+    l_max: int = 6
+    m_max: int = 2
+    n_heads: int = 8
+    d_in: int = 4                 # scalar input features per node (atom embed)
+    d_out: int = 1                # invariant readout (energy)
+    # Edge tiling: the eSCN conv processes edges in this many chunks so the
+    # (E_chunk, L2, C) message tensor bounds VMEM/HBM — the paper's tile
+    # parameter P applied to the pod (61M-edge ogb_products needs it).
+    edge_chunks: int = 1
+
+    @property
+    def L2(self) -> int:
+        return (self.l_max + 1) ** 2
+
+    def m_dim(self, l: int) -> int:
+        return min(2 * l + 1, 2 * self.m_max + 1)
+
+    def ls_for_m(self, m: int) -> list[int]:
+        return list(range(max(m, 1) if m > 0 else 0, self.l_max + 1))
+
+
+# §Perf hillclimb flag (benchmarks/hillclimb.py): gather/replicate the node
+# features ONCE per layer before the edge-chunk scan instead of letting the
+# partitioner re-all-gather them for every chunk's edge gather.
+_GATHER_ONCE = False
+
+
+def _l_slices(l_max: int) -> list[tuple[int, int]]:
+    """(start, size) of each degree block in the packed (l_max+1)^2 axis."""
+    out, off = [], 0
+    for l in range(l_max + 1):
+        out.append((off, 2 * l + 1))
+        off += 2 * l + 1
+    return out
+
+
+def init_params(cfg: EquiformerV2Config, rng: Array, *, dtype=jnp.float32) -> dict:
+    C, lm = cfg.d_hidden, cfg.l_max
+    keys = jax.random.split(rng, 4 + cfg.n_layers)
+
+    def so2_layer(k):
+        ks = jax.random.split(k, 3 + 2 * cfg.m_max + 2)
+        p = {}
+        n0 = (lm + 1) * C
+        p["w_m0"] = dense_init(ks[0], (n0, n0), fan_in=n0, dtype=dtype)
+        for m in range(1, cfg.m_max + 1):
+            nm = len(cfg.ls_for_m(m)) * C
+            p[f"w_m{m}_r"] = dense_init(ks[2 * m - 1], (nm, nm), fan_in=nm, dtype=dtype)
+            p[f"w_m{m}_i"] = dense_init(ks[2 * m], (nm, nm), fan_in=nm, dtype=dtype)
+        p["attn_mlp"] = mlp_init(ks[-3], [2 * C, C, cfg.n_heads], dtype=dtype)
+        p["gate"] = dense_init(ks[-2], (C, lm * C), fan_in=C, dtype=dtype)
+        p["ffn"] = mlp_init(ks[-1], [C, 2 * C, C], dtype=dtype)
+        p["norm_scale"] = jnp.ones((lm + 1, C), dtype)
+        return p
+
+    stacked = jax.tree_util.tree_map(lambda *xs: jnp.stack(xs),
+                                     *[so2_layer(k) for k in keys[4:]])
+    return {
+        "embed": dense_init(keys[0], (cfg.d_in, C), dtype=dtype),
+        "out_mlp": mlp_init(keys[1], [C, C, cfg.d_out], dtype=dtype),
+        "layers": stacked,
+    }
+
+
+def equivariant_rms_norm(cfg: EquiformerV2Config, x: Array, scale: Array) -> Array:
+    """Normalize each degree block by its RMS norm over (m, C)."""
+    parts = []
+    for l, (s, n) in enumerate(_l_slices(cfg.l_max)):
+        blk = x[:, s:s + n, :]
+        rms = jnp.sqrt(jnp.mean(jnp.square(blk), axis=(1, 2), keepdims=True) + 1e-6)
+        parts.append(blk / rms * scale[l][None, None, :])
+    return jnp.concatenate(parts, axis=1)
+
+
+def _so2_conv(cfg: EquiformerV2Config, lp: dict, rot: Array | dict,
+              x_edge: Array) -> Array:
+    """Rotate -> SO(2) linear (m-restricted) -> un-rotate.  x_edge (E, L2, C)."""
+    E, _, C = x_edge.shape
+    slices = _l_slices(cfg.l_max)
+
+    # Rotate into edge-aligned frame, keeping only |m| <= m_max rows.
+    rot_feats = []   # per l: (E, m_dim, C)
+    for l, (s, n) in enumerate(slices):
+        D = rot[l]                                   # (E, m_dim, 2l+1)
+        rot_feats.append(jnp.einsum("emn,enc->emc", D, x_edge[:, s:s + n, :]))
+
+    # Row layout within each l block (wigner_stack): [m=0, 1c, 1s, 2c, 2s, ...]
+    def row(l: int, m: int, part: str) -> Array:
+        if m == 0:
+            return rot_feats[l][:, 0, :]
+        base = 1 + 2 * (m - 1)
+        return rot_feats[l][:, base + (0 if part == "c" else 1), :]
+
+    out_rows = {l: {} for l in range(cfg.l_max + 1)}
+
+    # m = 0: plain linear over stacked (l, C).
+    x0 = jnp.concatenate([row(l, 0, "c") for l in range(cfg.l_max + 1)], axis=-1)
+    y0 = x0 @ lp["w_m0"]
+    for i, l in enumerate(range(cfg.l_max + 1)):
+        out_rows[l][(0, "c")] = y0[:, i * C:(i + 1) * C]
+
+    # m >= 1: complex linear (commutes with the residual z-rotation gauge).
+    for m in range(1, cfg.m_max + 1):
+        ls = cfg.ls_for_m(m)
+        xc = jnp.concatenate([row(l, m, "c") for l in ls], axis=-1)
+        xs = jnp.concatenate([row(l, m, "s") for l in ls], axis=-1)
+        wr, wi = lp[f"w_m{m}_r"], lp[f"w_m{m}_i"]
+        yc = xc @ wr - xs @ wi
+        ys = xs @ wr + xc @ wi
+        for i, l in enumerate(ls):
+            out_rows[l][(m, "c")] = yc[:, i * C:(i + 1) * C]
+            out_rows[l][(m, "s")] = ys[:, i * C:(i + 1) * C]
+
+    # Reassemble m-restricted blocks and rotate back with D^T.
+    outs = []
+    for l, (s, n) in enumerate(slices):
+        rows = [out_rows[l][(0, "c")]]
+        for m in range(1, min(l, cfg.m_max) + 1):
+            rows.extend([out_rows[l][(m, "c")], out_rows[l][(m, "s")]])
+        y = jnp.stack(rows, axis=1)                  # (E, m_dim, C)
+        D = rot[l]
+        outs.append(jnp.einsum("emn,emc->enc", D, y))
+    return jnp.concatenate(outs, axis=1)             # (E, L2, C)
+
+
+def forward(cfg: EquiformerV2Config, params: dict, g: GraphBatch,
+            *, policy=None, remat: bool = True) -> Array:
+    """Returns invariant per-graph predictions (n_graphs, d_out).
+
+    With a :class:`~repro.distributed.sharding.ShardingPolicy`, nodes shard
+    over the dp axes and channels over the model axis (2-D GNN partitioning
+    — the all-gathered feature matrix per layer is C/tp narrower, which is
+    what lets ogb_products fit; EXPERIMENTS.md §Dry-run iteration 2).
+    """
+    from jax.sharding import PartitionSpec as P
+    N, C = g.n_nodes, cfg.d_hidden
+    x = jnp.zeros((N, cfg.L2, C), params["embed"].dtype)
+    x = x.at[:, 0, :].set(g.node_feat @ params["embed"])
+    constrain = (
+        (lambda t: policy.constrain(
+            t, P(policy.dp_spec, None,
+                 policy.tp_axis if C % policy.tp == 0 else None)))
+        if policy is not None else (lambda t: t))
+    x = constrain(x)
+    snd, rcv = g.senders, g.receivers
+    emask = g.emask()
+
+    E = snd.shape[0]
+    # The data pipeline may deliver the Wigner blocks PRE-CHUNKED
+    # (n_chunks, Ec, m, 2l+1) — reshaping a sharded (E, ...) array in-model
+    # would split across shard boundaries and force XLA to replicate the
+    # full tensor (a 150 GB/device lesson from the ogb_products dry-run).
+    pre_chunked = (g.wigner is not None
+                   and next(iter(g.wigner.values())).ndim == 4)
+    if pre_chunked:
+        n_chunks = next(iter(g.wigner.values())).shape[0]
+    else:
+        n_chunks = cfg.edge_chunks if E % max(cfg.edge_chunks, 1) == 0 else 1
+
+    def _weighted_scatter(lp, wig_c, snd_c, rcv_c, alpha_c, h):
+        msg = _so2_conv(cfg, lp, wig_c, h[snd_c])
+        mh = msg.reshape(msg.shape[0], cfg.L2, cfg.n_heads, C // cfg.n_heads)
+        mh = mh * alpha_c[:, None, :, None]
+        return jax.ops.segment_sum(
+            mh.reshape(msg.shape[0], cfg.L2, C), rcv_c, num_segments=N)
+
+    def body(x, lp):
+        h = equivariant_rms_norm(cfg, x, lp["norm_scale"])
+        # Attention from invariant channels (cheap, full edge set).
+        inv = jnp.concatenate([h[snd][:, 0, :], h[rcv][:, 0, :]], axis=-1)
+        scores = mlp_apply(lp["attn_mlp"], inv)              # (E, heads)
+        scores = jnp.where(emask[:, None] > 0, scores, -1e30)
+        alpha = segment_softmax(scores, rcv, N)              # (E, heads)
+        alpha = alpha * emask[:, None]
+        if n_chunks == 1:
+            agg = _weighted_scatter(lp, g.wigner, snd, rcv, alpha, h)
+        else:
+            h_src = h
+            if _GATHER_ONCE and policy is not None:
+                # Hoist the feature gather out of the chunk loop: replicate
+                # the node dim once per layer (C stays model-sharded).
+                h_src = policy.constrain(
+                    h, P(None, None,
+                         policy.tp_axis if C % policy.tp == 0 else None))
+            ec = E // n_chunks
+            wig_xs = (g.wigner if pre_chunked else
+                      {l: w.reshape(n_chunks, ec, *w.shape[1:])
+                       for l, w in g.wigner.items()})
+            xs = (
+                wig_xs,
+                snd.reshape(n_chunks, ec),
+                rcv.reshape(n_chunks, ec),
+                alpha.reshape(n_chunks, ec, cfg.n_heads),
+            )
+
+            def chunk_body(acc, c):
+                wig_c, snd_c, rcv_c, alpha_c = c
+                return acc + _weighted_scatter(lp, wig_c, snd_c, rcv_c,
+                                               alpha_c, h_src), None
+
+            agg, _ = jax.lax.scan(
+                jax.checkpoint(chunk_body,
+                               policy=jax.checkpoint_policies.nothing_saveable),
+                jnp.zeros((N, cfg.L2, C), x.dtype), xs)
+        x = x + agg
+        # Gated nonlinearity: l=0 drives sigmoid gates for l > 0.
+        s0 = x[:, 0, :]
+        gates = jax.nn.sigmoid(s0 @ lp["gate"]).reshape(N, cfg.l_max, C)
+        parts = [jax.nn.silu(s0)[:, None, :] + 0 * x[:, :1, :]]
+        for l, (s, n) in enumerate(_l_slices(cfg.l_max)[1:], start=1):
+            parts.append(x[:, s:s + n, :] * gates[:, l - 1][:, None, :])
+        x = jnp.concatenate(parts, axis=1)
+        # Invariant FFN on l=0.
+        x = x.at[:, 0, :].add(mlp_apply(lp["ffn"], x[:, 0, :]))
+        return constrain(x), None
+
+    scan_body = body
+    if remat:
+        scan_body = jax.checkpoint(
+            body, policy=jax.checkpoint_policies.nothing_saveable)
+    x, _ = jax.lax.scan(scan_body, x, params["layers"])
+    inv = x[:, 0, :] * g.nmask()[:, None]
+    gid = g.graph_ids if g.graph_ids is not None else jnp.zeros((N,), jnp.int32)
+    pooled = jax.ops.segment_sum(inv, gid, num_segments=g.n_graphs)
+    return mlp_apply(params["out_mlp"], pooled)
+
+
+def loss_fn(cfg: EquiformerV2Config, params: dict, g: GraphBatch,
+            *, policy=None) -> tuple[Array, dict]:
+    pred = forward(cfg, params, g, policy=policy)
+    err = jnp.square((pred - g.labels).astype(jnp.float32))
+    loss = jnp.mean(err)
+    return loss, {"loss": loss, "mae": jnp.mean(jnp.abs(pred - g.labels))}

@@ -1,0 +1,112 @@
+"""GatedGCN (Bresson & Laurent; config from Dwivedi et al., arXiv:2003.00982).
+
+Edge-gated message passing:
+    e'_ij = e_ij + ReLU(LN(C e_ij + D h_i + E h_j))
+    eta_ij = sigma(e'_ij) / (sum_j' sigma(e'_ij') + eps)
+    h'_i  = h_i + ReLU(LN(A h_i + sum_j eta_ij * (B h_j)))
+
+LayerNorm replaces the reference BatchNorm (batch statistics don't shard;
+recorded in DESIGN.md).  Benchmarking-GNNs config: 16 layers, d_hidden 70.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+
+from ..common import dense_init, layer_norm
+from .graph import GraphBatch
+from .layers import scatter_sum
+
+Array = jax.Array
+
+
+@dataclass(frozen=True)
+class GatedGCNConfig:
+    name: str = "gatedgcn"
+    n_layers: int = 16
+    d_in: int = 16
+    d_edge_in: int = 16
+    d_hidden: int = 70
+    n_classes: int = 10
+    readout: str = "nodes"        # "nodes" | "graphs"
+
+
+def init_params(cfg: GatedGCNConfig, rng: Array, *, dtype=jnp.float32) -> dict:
+    d = cfg.d_hidden
+    k_in, k_ein, k_out, *keys = jax.random.split(rng, 3 + cfg.n_layers)
+
+    def layer(k):
+        ks = jax.random.split(k, 5)
+        return {
+            "A": dense_init(ks[0], (d, d), dtype=dtype),
+            "B": dense_init(ks[1], (d, d), dtype=dtype),
+            "C": dense_init(ks[2], (d, d), dtype=dtype),
+            "D": dense_init(ks[3], (d, d), dtype=dtype),
+            "E": dense_init(ks[4], (d, d), dtype=dtype),
+            "ln_h_s": jnp.ones((d,), dtype), "ln_h_b": jnp.zeros((d,), dtype),
+            "ln_e_s": jnp.ones((d,), dtype), "ln_e_b": jnp.zeros((d,), dtype),
+        }
+
+    # Stack layers for lax.scan.
+    stacked = jax.tree_util.tree_map(lambda *xs: jnp.stack(xs),
+                                     *[layer(k) for k in keys])
+    return {
+        "embed_h": dense_init(k_in, (cfg.d_in, d), dtype=dtype),
+        "embed_e": dense_init(k_ein, (cfg.d_edge_in, d), dtype=dtype),
+        "out": dense_init(k_out, (d, cfg.n_classes), dtype=dtype),
+        "layers": stacked,
+    }
+
+
+def forward(cfg: GatedGCNConfig, params: dict, g: GraphBatch,
+            *, policy=None, remat: bool = True) -> Array:
+    h = g.node_feat @ params["embed_h"]
+    e = (g.edge_feat if g.edge_feat is not None
+         else jnp.ones((g.n_edges, cfg.d_edge_in), h.dtype)) @ params["embed_e"]
+    emask = g.emask()[:, None]
+    snd, rcv, n = g.senders, g.receivers, g.n_nodes
+
+    def body(carry, lp):
+        h, e = carry
+        e_hat = e @ lp["C"] + (h @ lp["D"])[snd] + (h @ lp["E"])[rcv]
+        e = e + jax.nn.relu(layer_norm(e_hat, lp["ln_e_s"], lp["ln_e_b"]))
+        eta = jax.nn.sigmoid(e) * emask
+        denom = scatter_sum(eta, rcv, n) + 1e-6
+        msgs = scatter_sum(eta * (h @ lp["B"])[snd], rcv, n) / denom
+        h = h + jax.nn.relu(layer_norm(h @ lp["A"] + msgs,
+                                       lp["ln_h_s"], lp["ln_h_b"]))
+        return (h, e), None
+
+    scan_body = jax.checkpoint(
+        body, policy=jax.checkpoint_policies.nothing_saveable) if remat else body
+    (h, e), _ = jax.lax.scan(scan_body, (h, e), params["layers"])
+    if cfg.readout == "graphs":
+        pooled = jax.ops.segment_sum(h * g.nmask()[:, None], g.graph_ids,
+                                     num_segments=g.n_graphs)
+        cnt = jax.ops.segment_sum(g.nmask(), g.graph_ids, num_segments=g.n_graphs)
+        return (pooled / jnp.maximum(cnt, 1.0)[:, None]) @ params["out"]
+    return h @ params["out"]
+
+
+def loss_fn(cfg: GatedGCNConfig, params: dict, g: GraphBatch,
+            *, policy=None) -> tuple[Array, dict]:
+    logits = forward(cfg, params, g, policy=policy)
+    if cfg.readout == "graphs":
+        labels = g.labels
+        logz = jax.nn.logsumexp(logits.astype(jnp.float32), axis=-1)
+        gold = jnp.take_along_axis(logits.astype(jnp.float32),
+                                   labels[:, None], axis=-1)[:, 0]
+        loss = jnp.mean(logz - gold)
+        acc = jnp.mean(jnp.argmax(logits, -1) == labels)
+    else:
+        mask = g.nmask()
+        logz = jax.nn.logsumexp(logits.astype(jnp.float32), axis=-1)
+        gold = jnp.take_along_axis(logits.astype(jnp.float32),
+                                   g.labels[:, None], axis=-1)[:, 0]
+        loss = jnp.sum((logz - gold) * mask) / jnp.maximum(jnp.sum(mask), 1.0)
+        acc = jnp.sum((jnp.argmax(logits, -1) == g.labels) * mask) / jnp.maximum(
+            jnp.sum(mask), 1.0)
+    return loss, {"loss": loss, "acc": acc}

@@ -1,0 +1,72 @@
+"""Graph batch containers (padded, fixed-shape, pytree-registered).
+
+All graphs are padded to static shapes: masked edges carry zero weight and
+point at node 0, masked nodes contribute nothing to losses.  Batched small
+graphs (the ``molecule`` shape) concatenate nodes/edges and carry
+``graph_ids`` for segment readouts.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from functools import partial
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+Array = jax.Array
+
+
+@partial(jax.tree_util.register_dataclass,
+         data_fields=["node_feat", "senders", "receivers", "edge_feat",
+                      "labels", "node_mask", "edge_mask", "graph_ids",
+                      "positions", "wigner"],
+         meta_fields=["n_graphs"])
+@dataclass
+class GraphBatch:
+    node_feat: Array                       # (N, F)
+    senders: Array                         # (E,) int32
+    receivers: Array                       # (E,) int32
+    edge_feat: Optional[Array] = None      # (E, Fe)
+    labels: Optional[Array] = None         # (N,) int or (n_graphs, ...) float
+    node_mask: Optional[Array] = None      # (N,) float {0,1}
+    edge_mask: Optional[Array] = None      # (E,) float {0,1}
+    graph_ids: Optional[Array] = None      # (N,) int32, molecule batching
+    positions: Optional[Array] = None      # (N, 3), equivariant models
+    wigner: Optional[dict] = None          # {l: (E, m_dim, 2l+1)} eSCN blocks
+    n_graphs: int = 1
+
+    @property
+    def n_nodes(self) -> int:
+        return self.node_feat.shape[0]
+
+    @property
+    def n_edges(self) -> int:
+        return self.senders.shape[0]
+
+    def emask(self) -> Array:
+        if self.edge_mask is None:
+            return jnp.ones((self.n_edges,), jnp.float32)
+        return self.edge_mask
+
+    def nmask(self) -> Array:
+        if self.node_mask is None:
+            return jnp.ones((self.n_nodes,), jnp.float32)
+        return self.node_mask
+
+
+def degrees(g: GraphBatch, *, direction: str = "in") -> Array:
+    idx = g.receivers if direction == "in" else g.senders
+    return jax.ops.segment_sum(g.emask(), idx, num_segments=g.n_nodes)
+
+
+def sym_norm_coeffs(g: GraphBatch, *, eps: float = 1e-9) -> Array:
+    """GCN symmetric normalization 1/sqrt(d_i d_j) per edge (self-loops are
+    expected to already be present as edges)."""
+    deg_in = degrees(g, direction="in")
+    deg_out = degrees(g, direction="out")
+    inv_i = jax.lax.rsqrt(jnp.maximum(deg_in, eps))[g.receivers]
+    inv_j = jax.lax.rsqrt(jnp.maximum(deg_out, eps))[g.senders]
+    return inv_i * inv_j * g.emask()

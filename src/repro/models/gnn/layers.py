@@ -1,0 +1,53 @@
+"""Message-passing primitives over edge lists.
+
+JAX has no sparse SpMM beyond BCOO, so (per the brief) message passing is
+built from gathers + ``jax.ops.segment_sum``/``segment_max`` over the edge
+index — this module IS the system's aggregation substrate.  The pluggable
+``aggregate_fn`` hook lets the distributed runtime swap in the ring-SpMM
+(EnGN RER adaptation, :mod:`repro.distributed.ring`) or the fused Pallas
+kernel (:mod:`repro.kernels`) without touching model code.
+"""
+
+from __future__ import annotations
+
+from typing import Callable, Optional
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+
+AggregateFn = Callable[..., Array]
+
+
+def gather_scatter_sum(node_values: Array, senders: Array, receivers: Array,
+                       n_nodes: int, *, edge_weight: Optional[Array] = None) -> Array:
+    """sum_j w_ij * x_j for each receiver i — the SpMM A @ X as gather+segment_sum."""
+    msgs = node_values[senders]
+    if edge_weight is not None:
+        msgs = msgs * edge_weight[:, None]
+    return jax.ops.segment_sum(msgs, receivers, num_segments=n_nodes)
+
+
+def scatter_sum(edge_values: Array, receivers: Array, n_nodes: int,
+                *, edge_mask: Optional[Array] = None) -> Array:
+    if edge_mask is not None:
+        edge_values = edge_values * edge_mask[..., None]
+    return jax.ops.segment_sum(edge_values, receivers, num_segments=n_nodes)
+
+
+def scatter_mean(edge_values: Array, receivers: Array, n_nodes: int,
+                 *, edge_mask: Optional[Array] = None) -> Array:
+    mask = edge_mask if edge_mask is not None else jnp.ones(edge_values.shape[0])
+    tot = scatter_sum(edge_values, receivers, n_nodes, edge_mask=edge_mask)
+    cnt = jax.ops.segment_sum(mask, receivers, num_segments=n_nodes)
+    return tot / jnp.maximum(cnt, 1.0)[:, None]
+
+
+def scatter_max(edge_values: Array, receivers: Array, n_nodes: int,
+                *, edge_mask: Optional[Array] = None) -> Array:
+    if edge_mask is not None:
+        neg = jnp.asarray(-1e30, edge_values.dtype)
+        edge_values = jnp.where(edge_mask[..., None] > 0, edge_values, neg)
+    out = jax.ops.segment_max(edge_values, receivers, num_segments=n_nodes)
+    return jnp.where(jnp.isfinite(out) & (out > -1e29), out, 0.0)

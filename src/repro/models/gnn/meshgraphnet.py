@@ -1,0 +1,101 @@
+"""MeshGraphNet (Pfaff et al., arXiv:2010.03409): encode-process-decode.
+
+Processor step (x15, d=128, 2-layer MLPs with LayerNorm):
+    e'_ij = e_ij + MLP_e([e_ij, h_i, h_j])
+    h'_i  = h_i + MLP_v([h_i, sum_j e'_ij])
+Decoder regresses per-node targets (mesh dynamics).
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+
+from ..common import mlp_apply, mlp_init
+from .graph import GraphBatch
+from .layers import scatter_sum
+
+Array = jax.Array
+
+
+@dataclass(frozen=True)
+class MeshGraphNetConfig:
+    name: str = "meshgraphnet"
+    n_layers: int = 15            # processor message-passing steps
+    d_in: int = 12                # node input features (velocity, type, ...)
+    d_edge_in: int = 4            # relative displacement + norm
+    d_hidden: int = 128
+    mlp_layers: int = 2
+    d_out: int = 3                # predicted acceleration / field delta
+
+
+def _mlp_dims(cfg: MeshGraphNetConfig, d_in: int) -> list[int]:
+    return [d_in] + [cfg.d_hidden] * cfg.mlp_layers
+
+
+def init_params(cfg: MeshGraphNetConfig, rng: Array, *, dtype=jnp.float32) -> dict:
+    d = cfg.d_hidden
+    k_ne, k_ee, k_dec, *keys = jax.random.split(rng, 3 + cfg.n_layers)
+
+    def proc(k):
+        k1, k2 = jax.random.split(k)
+        return {
+            "edge_mlp": mlp_init(k1, _mlp_dims(cfg, 3 * d), layer_norm_out=True,
+                                 dtype=dtype),
+            "node_mlp": mlp_init(k2, _mlp_dims(cfg, 2 * d), layer_norm_out=True,
+                                 dtype=dtype),
+        }
+
+    stacked = jax.tree_util.tree_map(lambda *xs: jnp.stack(xs),
+                                     *[proc(k) for k in keys])
+    return {
+        "node_enc": mlp_init(k_ne, _mlp_dims(cfg, cfg.d_in),
+                             layer_norm_out=True, dtype=dtype),
+        "edge_enc": mlp_init(k_ee, _mlp_dims(cfg, cfg.d_edge_in),
+                             layer_norm_out=True, dtype=dtype),
+        "decoder": mlp_init(k_dec, [d] * cfg.mlp_layers + [cfg.d_out], dtype=dtype),
+        "processors": stacked,
+    }
+
+
+def forward(cfg: MeshGraphNetConfig, params: dict, g: GraphBatch,
+            *, policy=None, remat: bool = True) -> Array:
+    from jax.sharding import PartitionSpec as P
+    h = mlp_apply(params["node_enc"], g.node_feat, final_act=True)
+    ef = (g.edge_feat if g.edge_feat is not None
+          else jnp.ones((g.n_edges, cfg.d_edge_in), h.dtype))
+    e = mlp_apply(params["edge_enc"], ef, final_act=True)
+    emask = g.emask()[:, None]
+    snd, rcv, n = g.senders, g.receivers, g.n_nodes
+    constrain = (
+        (lambda t: policy.constrain(
+            t, P(policy.dp_spec,
+                 policy.tp_axis if cfg.d_hidden % policy.tp == 0 else None)))
+        if policy is not None else (lambda t: t))
+    h, e = constrain(h), constrain(e)
+
+    def body(carry, lp):
+        h, e = carry
+        e = e + mlp_apply(lp["edge_mlp"],
+                          jnp.concatenate([e, h[snd], h[rcv]], axis=-1),
+                          final_act=True)
+        agg = scatter_sum(e * emask, rcv, n)
+        h = h + mlp_apply(lp["node_mlp"], jnp.concatenate([h, agg], axis=-1),
+                          final_act=True)
+        return (constrain(h), constrain(e)), None
+
+    scan_body = jax.checkpoint(
+        body, policy=jax.checkpoint_policies.nothing_saveable) if remat else body
+    (h, e), _ = jax.lax.scan(scan_body, (h, e), params["processors"])
+    return mlp_apply(params["decoder"], h)
+
+
+def loss_fn(cfg: MeshGraphNetConfig, params: dict, g: GraphBatch,
+            *, policy=None) -> tuple[Array, dict]:
+    pred = forward(cfg, params, g, policy=policy)
+    mask = g.nmask()[:, None]
+    err = jnp.square((pred - g.labels).astype(jnp.float32)) * mask
+    loss = jnp.sum(err) / jnp.maximum(jnp.sum(mask) * cfg.d_out, 1.0)
+    return loss, {"loss": loss, "rmse": jnp.sqrt(loss)}

@@ -1,0 +1,5 @@
+"""Optimizers, schedules, gradient compression."""
+
+from .optimizers import adamw, sgd, apply_updates, global_norm
+
+__all__ = ["adamw", "sgd", "apply_updates", "global_norm"]

@@ -1,0 +1,62 @@
+"""int8 error-feedback gradient compression for data-parallel all-reduce.
+
+At 1000+ nodes the DP gradient all-reduce is frequently the collective-term
+bottleneck (see §Roofline for the LM train cells).  Quantizing gradients to
+int8 with per-tensor scales cuts the wire bytes 4x (f32) / 2x (bf16); the
+quantization error is carried in an error-feedback buffer and re-added next
+step (Karimireddy et al., arXiv:1901.09847), which preserves convergence.
+
+``compress_decompress`` is the functional core (tested for the
+contraction property); ``wrap_optimizer`` composes it with any
+:class:`repro.optim.optimizers.Optimizer`.  The wire-byte saving is modeled
+by the ``compressed_ratio`` argument of
+:func:`repro.core.tpu_model.dp_gradient_sync`.
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from .optimizers import Optimizer
+
+__all__ = ["compress_decompress", "wrap_optimizer", "CompressedState"]
+
+
+def _quantize(x: jax.Array) -> tuple[jax.Array, jax.Array]:
+    scale = jnp.max(jnp.abs(x)) / 127.0 + 1e-30
+    q = jnp.clip(jnp.round(x / scale), -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+def compress_decompress(g: jax.Array, err: jax.Array) -> tuple[jax.Array, jax.Array]:
+    """Returns (decompressed gradient as seen after all-reduce, new error)."""
+    g32 = g.astype(jnp.float32) + err
+    q, scale = _quantize(g32)
+    deq = q.astype(jnp.float32) * scale
+    return deq.astype(g.dtype), g32 - deq
+
+
+class CompressedState(NamedTuple):
+    inner: object
+    error: object
+
+
+def wrap_optimizer(optimizer: Optimizer) -> Optimizer:
+    def init(params):
+        err = jax.tree_util.tree_map(
+            lambda p: jnp.zeros(p.shape, jnp.float32), params)
+        return CompressedState(optimizer.init(params), err)
+
+    def update(grads, state, params):
+        pairs = jax.tree_util.tree_map(compress_decompress, grads, state.error)
+        deq = jax.tree_util.tree_map(lambda pr: pr[0], pairs,
+                                     is_leaf=lambda x: isinstance(x, tuple))
+        err = jax.tree_util.tree_map(lambda pr: pr[1], pairs,
+                                     is_leaf=lambda x: isinstance(x, tuple))
+        updates, inner = optimizer.update(deq, state.inner, params)
+        return updates, CompressedState(inner, err)
+
+    return Optimizer(init=init, update=update)

@@ -1,0 +1,157 @@
+"""Optimizers: AdamW and SGD with schedules and global-norm clipping.
+
+Functional, optax-shaped API (init/update pytrees) without the dependency:
+
+    opt = adamw(lr=3e-4)
+    state = opt.init(params)
+    updates, state = opt.update(grads, state, params)
+    params = apply_updates(params, updates)
+
+States are pytrees of arrays, so they shard with the same PartitionSpecs as
+the parameters (and over the dp axis when ZeRO-1 is enabled by the policy).
+"""
+
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass
+from typing import Callable, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+PyTree = object
+
+__all__ = ["Optimizer", "adamw", "sgd", "apply_updates", "global_norm",
+           "clip_by_global_norm", "cosine_schedule", "linear_warmup"]
+
+
+@dataclass(frozen=True)
+class Optimizer:
+    init: Callable[[PyTree], PyTree]
+    update: Callable[[PyTree, PyTree, PyTree], tuple[PyTree, PyTree]]
+
+
+def global_norm(tree: PyTree) -> Array:
+    leaves = jax.tree_util.tree_leaves(tree)
+    return jnp.sqrt(sum(jnp.sum(jnp.square(x.astype(jnp.float32))) for x in leaves))
+
+
+def clip_by_global_norm(tree: PyTree, max_norm: float) -> tuple[PyTree, Array]:
+    norm = global_norm(tree)
+    scale = jnp.minimum(1.0, max_norm / (norm + 1e-9))
+    return jax.tree_util.tree_map(lambda x: x * scale.astype(x.dtype), tree), norm
+
+
+def cosine_schedule(base_lr: float, warmup: int, total: int,
+                    final_frac: float = 0.1) -> Callable[[Array], Array]:
+    def lr(step: Array) -> Array:
+        step = step.astype(jnp.float32)
+        warm = base_lr * step / max(warmup, 1)
+        t = jnp.clip((step - warmup) / max(total - warmup, 1), 0.0, 1.0)
+        cos = base_lr * (final_frac + (1 - final_frac) * 0.5 * (1 + jnp.cos(jnp.pi * t)))
+        return jnp.where(step < warmup, warm, cos)
+    return lr
+
+
+def linear_warmup(base_lr: float, warmup: int) -> Callable[[Array], Array]:
+    def lr(step: Array) -> Array:
+        return base_lr * jnp.minimum(1.0, step.astype(jnp.float32) / max(warmup, 1))
+    return lr
+
+
+class AdamWState(NamedTuple):
+    step: Array
+    mu: PyTree
+    nu: PyTree
+
+
+def adamw(lr: float | Callable[[Array], Array] = 1e-3, *, b1: float = 0.9,
+          b2: float = 0.95, eps: float = 1e-8, weight_decay: float = 0.0,
+          clip_norm: Optional[float] = 1.0,
+          state_dtype=jnp.float32) -> Optimizer:
+    """AdamW.  ``state_dtype=bf16`` halves m/v memory — required to fit
+    arctic-480b's optimizer on 256 chips (DESIGN.md records the numeric
+    trade-off; 8-bit blockwise states are the production hardening step).
+    Moment math always runs in f32; states are stored in ``state_dtype``."""
+    lr_fn = lr if callable(lr) else (lambda _: jnp.asarray(lr, jnp.float32))
+
+    def init(params: PyTree) -> AdamWState:
+        zeros = lambda p: jax.tree_util.tree_map(
+            lambda x: jnp.zeros_like(x, dtype=state_dtype), p)
+        return AdamWState(jnp.zeros((), jnp.int32), zeros(params), zeros(params))
+
+    def update(grads: PyTree, state: AdamWState, params: PyTree):
+        if clip_norm is not None:
+            grads, gnorm = clip_by_global_norm(grads, clip_norm)
+        else:
+            gnorm = global_norm(grads)
+        step = state.step + 1
+        stepf = step.astype(jnp.float32)
+        bc1 = 1.0 - b1 ** stepf
+        bc2 = 1.0 - b2 ** stepf
+        lr_t = lr_fn(step)
+
+        def upd(g, m, v, p):
+            g32 = g.astype(jnp.float32)
+            m32 = b1 * m.astype(jnp.float32) + (1 - b1) * g32
+            v32 = b2 * v.astype(jnp.float32) + (1 - b2) * jnp.square(g32)
+            mh = m32 / bc1
+            vh = v32 / bc2
+            du = mh / (jnp.sqrt(vh) + eps)
+            if weight_decay:
+                du = du + weight_decay * p.astype(jnp.float32)
+            return ((-lr_t * du).astype(p.dtype), m32.astype(state_dtype),
+                    v32.astype(state_dtype))
+
+        flat_g, tdef = jax.tree_util.tree_flatten(grads)
+        flat_m = tdef.flatten_up_to(state.mu)
+        flat_v = tdef.flatten_up_to(state.nu)
+        flat_p = tdef.flatten_up_to(params)
+        out = [upd(g, m, v, p) for g, m, v, p in zip(flat_g, flat_m, flat_v, flat_p)]
+        updates = tdef.unflatten([o[0] for o in out])
+        mu = tdef.unflatten([o[1] for o in out])
+        nu = tdef.unflatten([o[2] for o in out])
+        new_state = AdamWState(step, mu, nu)
+        return updates, new_state
+
+    return Optimizer(init=init, update=update)
+
+
+class SGDState(NamedTuple):
+    step: Array
+    momentum: PyTree
+
+
+def sgd(lr: float | Callable[[Array], Array] = 1e-2, *, momentum: float = 0.9,
+        clip_norm: Optional[float] = None) -> Optimizer:
+    lr_fn = lr if callable(lr) else (lambda _: jnp.asarray(lr, jnp.float32))
+
+    def init(params: PyTree) -> SGDState:
+        z = jax.tree_util.tree_map(lambda x: jnp.zeros_like(x, jnp.float32), params)
+        return SGDState(jnp.zeros((), jnp.int32), z)
+
+    def update(grads: PyTree, state: SGDState, params: PyTree):
+        if clip_norm is not None:
+            grads, _ = clip_by_global_norm(grads, clip_norm)
+        step = state.step + 1
+        lr_t = lr_fn(step)
+
+        def upd(g, m):
+            m = momentum * m + g.astype(jnp.float32)
+            return (-lr_t * m), m
+
+        pairs = jax.tree_util.tree_map(upd, grads, state.momentum)
+        updates = jax.tree_util.tree_map(
+            lambda p, pair: pair[0].astype(p.dtype), params, pairs,
+            is_leaf=lambda x: isinstance(x, tuple))
+        mom = jax.tree_util.tree_map(
+            lambda pair: pair[1], pairs, is_leaf=lambda x: isinstance(x, tuple))
+        return updates, SGDState(step, mom)
+
+    return Optimizer(init=init, update=update)
+
+
+def apply_updates(params: PyTree, updates: PyTree) -> PyTree:
+    return jax.tree_util.tree_map(lambda p, u: p + u.astype(p.dtype), params, updates)

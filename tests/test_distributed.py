@@ -1,0 +1,19 @@
+"""Runs the 8-fake-device battery (tests/distributed_checks.py) in a
+subprocess — the device count must be forced before jax initializes, which
+cannot happen inside an already-initialized pytest process."""
+
+import os
+import subprocess
+import sys
+from pathlib import Path
+
+
+def test_distributed_battery():
+    script = Path(__file__).parent / "distributed_checks.py"
+    env = dict(os.environ)
+    src = str(Path(__file__).resolve().parents[1] / "src")
+    env["PYTHONPATH"] = src + os.pathsep + env.get("PYTHONPATH", "")
+    proc = subprocess.run([sys.executable, str(script)], env=env,
+                          capture_output=True, text=True, timeout=1200)
+    assert proc.returncode == 0, f"STDOUT:\n{proc.stdout}\nSTDERR:\n{proc.stderr}"
+    assert "ALL DISTRIBUTED CHECKS PASSED" in proc.stdout
