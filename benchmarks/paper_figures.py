@@ -8,9 +8,12 @@ import time
 
 import numpy as np
 
+from repro.core import (FullGraphParams, MultiLayerModel, TiledGraphModel,
+                        registry)
 from repro.core.sweep import (fig3_engn_movement, fig4_hygcn_movement,
                               fig5_iterations_vs_bandwidth,
-                              fig6_fitting_factor, fig7_systolic_reuse)
+                              fig6_fitting_factor, fig7_systolic_reuse,
+                              sweep_accelerators)
 
 
 def _timed(fn, *args, repeats: int = 20, **kw):
@@ -66,4 +69,44 @@ def fig7() -> list[dict]:
     return rows
 
 
-ALL = (fig3, fig4, fig5, fig6, fig7)
+def sweep_all() -> list[dict]:
+    """Every registered accelerator over the default K grid, one stacked call."""
+    res, us = _timed(sweep_accelerators)
+    rows = res.rows()
+    for r in rows:
+        r.update(figure="sweep_all_accelerators", us_per_call=us)
+    return rows
+
+
+def cora_end_to_end() -> list[dict]:
+    """Full-graph composition: 2-layer GCN on Cora for every accelerator,
+    vectorized across a tile-capacity grid in a single call per dataflow."""
+    tile_caps = np.array([256, 512, 1024, 2048], dtype=np.float64)
+    cora = FullGraphParams(V=2708, E=10556, N=1433, T=7)
+
+    def run():
+        outs = {}
+        for name in registry.names():
+            model = TiledGraphModel(MultiLayerModel(name, [1433, 16, 7]),
+                                    tile_vertices=tile_caps)
+            outs[name] = model.evaluate(cora)
+        return outs
+
+    outs, us = _timed(run)
+    rows = []
+    for name, out in outs.items():
+        n_tiles = np.broadcast_to(out.meta["n_tiles"], tile_caps.shape)
+        total = np.broadcast_to(out.total_bits(), tile_caps.shape)
+        offchip = np.broadcast_to(out.offchip_bits(), tile_caps.shape)
+        halo = np.broadcast_to(out["haloreload"].data_bits, tile_caps.shape)
+        for i, cap in enumerate(tile_caps):
+            rows.append({
+                "figure": "cora_end_to_end", "accelerator": name,
+                "tile_vertices": float(cap), "n_tiles": float(n_tiles[i]),
+                "total_bits": float(total[i]), "offchip_bits": float(offchip[i]),
+                "halo_bits": float(halo[i]), "us_per_call": us,
+            })
+    return rows
+
+
+ALL = (fig3, fig4, fig5, fig6, fig7, sweep_all, cora_end_to_end)

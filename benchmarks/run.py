@@ -2,7 +2,11 @@
 
 Prints one CSV per paper table/figure (name,us_per_call,derived columns)
 followed by the §Roofline table derived from the dry-run artifacts (if
-present).  Use ``--figure figN`` / ``--skip-roofline`` to subset.
+present).  Use ``--figure figN`` / ``--skip-roofline`` to subset, and
+``--json [PATH]`` to additionally emit a machine-readable timing summary
+(default ``BENCH_sweep.json``) covering fig3-fig7 plus the all-accelerator
+and full-graph composition sweeps — future PRs diff this file for the
+sweep engine's perf trajectory.
 """
 
 from __future__ import annotations
@@ -10,6 +14,7 @@ from __future__ import annotations
 import argparse
 import csv
 import io
+import json
 
 
 def _print_csv(name: str, rows: list[dict]) -> None:
@@ -29,16 +34,37 @@ def _print_csv(name: str, rows: list[dict]) -> None:
 def main() -> None:
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("--figure", default=None,
-                    help="only this figure (fig3..fig7)")
+                    help="only this benchmark (fig3..fig7, sweep_all, "
+                         "cora_end_to_end)")
     ap.add_argument("--skip-roofline", action="store_true")
+    ap.add_argument("--json", nargs="?", const="BENCH_sweep.json", default=None,
+                    metavar="PATH",
+                    help="also write a timing summary JSON (default "
+                         "BENCH_sweep.json)")
     args = ap.parse_args()
 
     from . import paper_figures
 
+    summary: dict[str, dict] = {}
     for fn in paper_figures.ALL:
         if args.figure and fn.__name__ != args.figure:
             continue
-        _print_csv(fn.__name__, fn())
+        rows = fn()
+        _print_csv(fn.__name__, rows)
+        # Keyed by the per-row figure label so independently-timed
+        # sub-benchmarks (fig5 times engn and hygcn separately) each keep
+        # their own perf-trajectory entry.
+        for r in rows:
+            entry = summary.setdefault(
+                str(r.get("figure", fn.__name__)),
+                {"us_per_call": r.get("us_per_call"), "n_rows": 0})
+            entry["n_rows"] += 1
+
+    if args.json is not None:
+        with open(args.json, "w") as f:
+            json.dump({"benchmarks": summary}, f, indent=2, sort_keys=True)
+            f.write("\n")
+        print(f"# wrote {args.json} ({len(summary)} benchmarks)")
 
     if not args.skip_roofline and not args.figure:
         from . import roofline

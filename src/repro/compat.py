@@ -1,0 +1,32 @@
+"""Version compatibility shims for the pinned jax.
+
+The repo targets the modern jax API surface but must run on the baked-in
+jax 0.4.x toolchain, where ``shard_map`` still lives under
+``jax.experimental`` and takes ``check_rep`` instead of ``check_vma``.
+Import :func:`shard_map` from here instead of ``jax`` directly.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+
+__all__ = ["shard_map", "axis_size"]
+
+
+def axis_size(axis_name) -> jax.Array:
+    """``jax.lax.axis_size`` with a 0.4.x fallback (psum of ones)."""
+    if hasattr(jax.lax, "axis_size"):
+        return jax.lax.axis_size(axis_name)
+    return jax.lax.psum(1, axis_name)
+
+if hasattr(jax, "shard_map"):
+    shard_map = jax.shard_map
+else:
+    from jax.experimental.shard_map import shard_map as _legacy_shard_map
+
+    @functools.wraps(_legacy_shard_map)
+    def shard_map(f, *, mesh, in_specs, out_specs, check_vma: bool = True):
+        return _legacy_shard_map(f, mesh=mesh, in_specs=in_specs,
+                                 out_specs=out_specs, check_rep=check_vma)

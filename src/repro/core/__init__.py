@@ -2,33 +2,71 @@
 
 Public surface:
 
-* :class:`~repro.core.engn.EnGNModel` / :class:`~repro.core.hygcn.HyGCNModel`
-  — Tables III/IV as closed-form, broadcasting models.
-* :mod:`repro.core.sweep` — Figures 3-7 sweep engine.
+* :mod:`repro.core.dataflow` — the declarative layer: an accelerator is a
+  :class:`~repro.core.dataflow.DataflowSpec` (ordered movement-level closed
+  forms) evaluated by one shared engine.
+* :mod:`repro.core.registry` — resolve any registered dataflow by name:
+  ``engn`` / ``hygcn`` (Tables III/IV), ``spmm_tiled`` (fused block-dense
+  Pallas-kernel analogue), ``awb_gcn`` (column-balanced dataflow).
+* :mod:`repro.core.compose` — composition layer: ``MultiLayerModel`` (L
+  chained GNN layers with residency policy) and ``TiledGraphModel`` (full
+  graphs over a tile schedule with halo reloads).
+* :mod:`repro.core.sweep` — Figures 3-7 sweep engine plus the stacked
+  all-accelerator sweep.
 * :mod:`repro.core.tpu_model` — the methodology adapted to a TPU v5e pod
   (three-term roofline + per-strategy analytical collective models).
-* :mod:`repro.core.validation` — analytical-vs-compiled-HLO validation.
+* :mod:`repro.core.validation` — analytical-vs-compiled-HLO validation and
+  seed golden totals for the registry-evaluated models.
 """
 
-from .engn import EnGNModel
-from .hygcn import HyGCNModel
-from .notation import (EnGNHardwareParams, GraphTileParams,
-                       HyGCNHardwareParams, PAPER_DEFAULT_ENGN,
-                       PAPER_DEFAULT_GRAPH, PAPER_DEFAULT_HYGCN,
+from . import registry
+from .awb_gcn import AWBGCNModel, AWB_GCN_SPEC
+from .compose import (FullGraphParams, MultiLayerModel, RESIDENCY_POLICIES,
+                      TiledGraphModel)
+from .dataflow import DataflowSpec, MovementSpec, SpecModel, MOVEMENT_ROLES
+from .engn import ENGN_SPEC, EnGNModel
+from .hygcn import HYGCN_SPEC, HyGCNModel
+from .notation import (AWBGCNHardwareParams, EnGNHardwareParams,
+                       GraphTileParams, HyGCNHardwareParams,
+                       PAPER_DEFAULT_ENGN, PAPER_DEFAULT_GRAPH,
+                       PAPER_DEFAULT_HYGCN, TiledSpMMHardwareParams,
                        paper_default_graph)
+from .spmm_tiled import SPMM_TILED_SPEC, TiledSpMMModel
 from .terms import (AcceleratorModel, L1_CLASSES, L2_CLASSES, CACHE_CLASSES,
                     ModelOutput, MovementTerm, tabulate)
 
 __all__ = [
+    # declarative layer + registry
+    "DataflowSpec",
+    "MovementSpec",
+    "SpecModel",
+    "MOVEMENT_ROLES",
+    "registry",
+    # models / specs
     "EnGNModel",
     "HyGCNModel",
+    "TiledSpMMModel",
+    "AWBGCNModel",
+    "ENGN_SPEC",
+    "HYGCN_SPEC",
+    "SPMM_TILED_SPEC",
+    "AWB_GCN_SPEC",
+    # composition
+    "MultiLayerModel",
+    "TiledGraphModel",
+    "FullGraphParams",
+    "RESIDENCY_POLICIES",
+    # notation
     "GraphTileParams",
     "EnGNHardwareParams",
     "HyGCNHardwareParams",
+    "TiledSpMMHardwareParams",
+    "AWBGCNHardwareParams",
     "paper_default_graph",
     "PAPER_DEFAULT_GRAPH",
     "PAPER_DEFAULT_ENGN",
     "PAPER_DEFAULT_HYGCN",
+    # term algebra
     "AcceleratorModel",
     "ModelOutput",
     "MovementTerm",

@@ -1,0 +1,237 @@
+"""Composition layer: from one tile-layer to L-layer, full-graph totals.
+
+The paper's Tables III/IV model **one GNN layer over one graph tile**.
+This module composes any registered dataflow upward (DESIGN.md §7):
+
+* :class:`MultiLayerModel` — chain L GNN layers, propagating the feature
+  width (layer l maps ``widths[l] -> widths[l+1]`` elements per vertex),
+  with an inter-layer **residency policy**: ``"spill"`` (every layer writes
+  its outputs to L2 and the next layer reloads them — generalizing HyGCN's
+  inter-phase terms to inter-*layer*) or ``"resident"`` (interior outputs
+  stay on-array; the interior vertex_out/vertex_in movement levels are
+  replaced by a single on-chip hand-off term).
+* :class:`TiledGraphModel` — cover a full graph: a tile schedule is derived
+  from (V, E) and the tile vertex capacity, every tile re-evaluates the
+  inner model, and an inter-tile **halo-reload** term charges re-fetching
+  remote source features for cut edges.
+
+Both compose: ``TiledGraphModel(MultiLayerModel("engn", widths))`` answers
+the paper's open question "total movement for GCN-on-Cora end-to-end".
+All arithmetic stays closed-form and broadcasting, so array-valued tile
+capacities / graph sizes sweep in one vectorized call.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass
+
+import numpy as np
+
+from .dataflow import DataflowSpec, SpecModel
+from .notation import GraphTileParams, ParamArray
+from .terms import ModelOutput, MovementTerm, ceil
+
+__all__ = [
+    "MultiLayerModel",
+    "TiledGraphModel",
+    "FullGraphParams",
+    "RESIDENCY_POLICIES",
+]
+
+RESIDENCY_POLICIES = ("spill", "resident")
+
+
+def _f64(x) -> np.ndarray:
+    return np.asarray(x, dtype=np.float64)
+
+
+def _resolve_spec(dataflow) -> DataflowSpec:
+    if isinstance(dataflow, str):
+        from . import registry
+        return registry.get(dataflow)
+    if isinstance(dataflow, DataflowSpec):
+        return dataflow
+    if isinstance(dataflow, SpecModel):
+        return dataflow.spec
+    raise TypeError(f"cannot resolve a DataflowSpec from {type(dataflow).__name__}")
+
+
+class _TermAccumulator:
+    """Sum (bits, iterations) contributions by (name, hierarchy), in order."""
+
+    def __init__(self) -> None:
+        self._order: list[tuple[str, str]] = []
+        self._bits: dict[tuple[str, str], np.ndarray] = {}
+        self._iters: dict[tuple[str, str], np.ndarray] = {}
+
+    def add(self, name: str, hierarchy: str, bits, iterations) -> None:
+        key = (name, hierarchy)
+        if key not in self._bits:
+            self._order.append(key)
+            self._bits[key] = _f64(bits)
+            self._iters[key] = _f64(iterations)
+        else:
+            self._bits[key] = self._bits[key] + _f64(bits)
+            self._iters[key] = self._iters[key] + _f64(iterations)
+
+    def terms(self) -> tuple[MovementTerm, ...]:
+        return tuple(MovementTerm(n, h, self._bits[(n, h)], self._iters[(n, h)])
+                     for n, h in self._order)
+
+
+class MultiLayerModel:
+    """L chained GNN layers of one dataflow, with width propagation.
+
+    ``widths`` is the per-vertex feature-element sequence ``[N_0, ..., N_L]``;
+    layer l evaluates the inner dataflow at ``N = widths[l], T = widths[l+1]``
+    on the same tile topology (K, L, P from the input graph).  With the
+    ``"spill"`` policy the total is the plain sum over layers (each layer
+    pays its own vertex loads/stores); ``"resident"`` keeps interior
+    activations on-array, dropping interior ``vertex_out``/``vertex_in``
+    levels in favour of one ``residenthandoff`` L1-L1 term of
+    ``K * widths[l+1] * sigma`` bits per boundary.
+    """
+
+    def __init__(self, dataflow, widths, *, residency: str = "spill") -> None:
+        self.spec = _resolve_spec(dataflow)
+        if len(widths) < 2:
+            raise ValueError(f"need >= 2 widths (got {list(widths)}): "
+                             "a layer maps widths[l] -> widths[l+1]")
+        if residency not in RESIDENCY_POLICIES:
+            raise ValueError(f"unknown residency {residency!r}; "
+                             f"expected one of {RESIDENCY_POLICIES}")
+        self.widths = tuple(widths)
+        self.residency = residency
+        self.name = f"{self.spec.name}_L{self.n_layers}_{residency}"
+
+    @property
+    def n_layers(self) -> int:
+        return len(self.widths) - 1
+
+    def resolve_hw(self, hw=None):
+        return self.spec.resolve_hw(hw)
+
+    def halo_feature_elems(self) -> np.ndarray:
+        """Per-vertex elements fetched across tile boundaries, all layers."""
+        return _f64(sum(_f64(w) for w in self.widths[:-1]))
+
+    def evaluate(self, graph: GraphTileParams, hw=None) -> ModelOutput:
+        hw = self.resolve_hw(hw)
+        L = self.n_layers
+        acc = _TermAccumulator()
+        for l in range(L):
+            g_l = graph.replace(N=self.widths[l], T=self.widths[l + 1])
+            for m in self.spec.movements:
+                if self.residency == "resident":
+                    if m.role == "vertex_out" and l < L - 1:
+                        continue
+                    if m.role == "vertex_in" and l > 0:
+                        continue
+                bits, iters = m.form(g_l, hw)
+                acc.add(m.name, m.hierarchy, bits, iters)
+        if self.residency == "resident":
+            K = _f64(graph.K)
+            s = _f64(hw.sigma)
+            for l in range(L - 1):
+                acc.add("residenthandoff", "L1-L1",
+                        K * _f64(self.widths[l + 1]) * s, np.ones_like(K))
+        return ModelOutput(
+            accelerator=self.name,
+            terms=acc.terms(),
+            meta={"hw": hw, "graph": graph, "spec": self.spec,
+                  "widths": self.widths, "residency": self.residency},
+        )
+
+
+@dataclass(frozen=True)
+class FullGraphParams:
+    """A whole (untiled) graph plus the layer-level feature widths.
+
+    Attributes:
+      V: total vertex count.
+      E: total edge count.
+      N: input feature width (elements per vertex).
+      T: output feature width.  For a MultiLayerModel inner model, N/T are
+         superseded by its ``widths``.
+      high_degree_fraction: fraction of each tile's vertices served by a
+         dedicated degree-aware cache (EnGN's L; same L = K/10 default as
+         :func:`repro.core.notation.paper_default_graph`).
+    """
+
+    V: ParamArray
+    E: ParamArray
+    N: ParamArray
+    T: ParamArray
+    high_degree_fraction: float = 0.1
+
+    def replace(self, **kw) -> "FullGraphParams":
+        return dataclasses.replace(self, **kw)
+
+
+class TiledGraphModel:
+    """Sum a per-tile model over the tile schedule of a full graph.
+
+    The schedule slices V vertices into ``n_tiles = ceil(V / tile_vertices)``
+    balanced tiles of ``K = ceil(V / n_tiles)`` vertices and ``P = ceil(E /
+    n_tiles)`` intra-tile edges (the paper's uniform-tile assumption).  On
+    top of ``n_tiles x`` the per-tile movement, an inter-tile ``haloreload``
+    L2-L1 term charges re-fetching remote source features for cut edges:
+    with a random balanced partition the expected cut fraction is
+    ``1 - 1/n_tiles``, and ``halo_dedup >= 1`` divides it for duplicate
+    sources cached within a tile pass.
+    """
+
+    def __init__(self, inner, *, tile_vertices: ParamArray = 1024,
+                 halo_dedup: float = 1.0) -> None:
+        if isinstance(inner, MultiLayerModel):
+            self.inner = inner
+        else:
+            spec = _resolve_spec(inner)
+            self.inner = SpecModel(spec)
+        self.tile_vertices = tile_vertices
+        self.halo_dedup = float(halo_dedup)
+        if self.halo_dedup < 1.0:
+            raise ValueError("halo_dedup must be >= 1 (it divides halo traffic)")
+        inner_name = getattr(self.inner, "name", type(self.inner).__name__)
+        self.name = f"{inner_name}_tiled"
+
+    def resolve_hw(self, hw=None):
+        return self.inner.spec.resolve_hw(hw)
+
+    def tile_schedule(self, full: FullGraphParams) -> tuple[np.ndarray, GraphTileParams]:
+        """(n_tiles, per-tile GraphTileParams) for the full graph."""
+        V, E = _f64(full.V), _f64(full.E)
+        n_tiles = np.maximum(ceil(V / _f64(self.tile_vertices)), 1.0)
+        K = ceil(V / n_tiles)
+        return n_tiles, GraphTileParams(
+            N=_f64(full.N),
+            T=_f64(full.T),
+            K=K,
+            L=np.floor(K * full.high_degree_fraction),
+            P=ceil(E / n_tiles),
+        )
+
+    def _halo_width(self) -> np.ndarray:
+        if isinstance(self.inner, MultiLayerModel):
+            return self.inner.halo_feature_elems()
+        return None  # use the full graph's N
+
+    def evaluate(self, full: FullGraphParams, hw=None) -> ModelOutput:
+        hw = self.resolve_hw(hw)
+        n_tiles, tile = self.tile_schedule(full)
+        per_tile = self.inner.evaluate(tile, hw)
+        terms = list(per_tile.scaled(n_tiles).terms)
+        width = self._halo_width()
+        if width is None:
+            width = _f64(full.N)
+        cut_edges = _f64(full.E) * (1.0 - 1.0 / n_tiles)
+        halo_bits = cut_edges * width * _f64(hw.sigma) / self.halo_dedup
+        halo_iters = ceil(halo_bits / _f64(hw.B))
+        terms.append(MovementTerm("haloreload", "L2-L1", halo_bits, halo_iters))
+        return ModelOutput(
+            accelerator=self.name,
+            terms=tuple(terms),
+            meta={"hw": hw, "graph": full, "n_tiles": n_tiles,
+                  "tile": tile, "inner": self.inner},
+        )

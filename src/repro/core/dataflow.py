@@ -1,0 +1,134 @@
+"""Declarative dataflow layer: an accelerator described as data, not code.
+
+The paper characterizes each accelerator as an ordered list of movement
+levels (Tables III/IV).  Historically this repo transcribed each table into
+a hand-written module of row functions; adding a third dataflow meant
+copy-pasting a module.  This layer makes the table itself the artifact:
+
+* :class:`MovementSpec` — one movement level: a name, a memory-hierarchy
+  class, a *role* (what the traffic carries, used by the composition layer
+  in :mod:`repro.core.compose`), and a closed form mapping
+  ``(graph, hw) -> (data_bits, iterations)``.
+* :class:`DataflowSpec` — an ordered tuple of movement specs plus a
+  hardware-parameter factory.  One shared engine (:meth:`DataflowSpec.
+  evaluate`) turns any spec into a :class:`~repro.core.terms.ModelOutput`;
+  there is no per-accelerator evaluation code anymore.
+* :class:`SpecModel` — adapter keeping the original
+  :class:`~repro.core.terms.AcceleratorModel` class API on top of a spec.
+
+Specs are registered by name in :mod:`repro.core.registry`, which is how
+the sweep engine, validation, benchmarks, and examples resolve them.
+All closed forms broadcast, so array-valued graph or hardware parameters
+evaluate entire sweeps in one call (see DESIGN.md §4).
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Callable, Mapping, Tuple
+
+import numpy as np
+
+from .terms import AcceleratorModel, ModelOutput, MovementTerm
+
+__all__ = ["MovementSpec", "DataflowSpec", "SpecModel", "MOVEMENT_ROLES"]
+
+#: What a movement level's traffic carries.  The composition layer keys its
+#: inter-layer residency policy on ``vertex_in`` / ``vertex_out``.
+MOVEMENT_ROLES = (
+    "vertex_in",    # loads input vertex features into the array
+    "vertex_out",   # writes output vertex features back out
+    "edges",        # streams graph topology (edge lists / adjacency blocks)
+    "weights",      # loads model weights
+    "compute",      # on-array traffic of the compute stages
+    "interphase",   # traffic through an intermediate (inter-phase) buffer
+    "other",
+)
+
+#: Closed form of one movement level: (graph, hw) -> (data_bits, iterations).
+MovementForm = Callable[[object, object], Tuple[np.ndarray, np.ndarray]]
+
+
+@dataclass(frozen=True)
+class MovementSpec:
+    """One movement level of a dataflow, as a declarative record."""
+
+    name: str
+    hierarchy: str
+    form: MovementForm
+    role: str = "other"
+
+    def __post_init__(self) -> None:
+        if self.role not in MOVEMENT_ROLES:
+            raise ValueError(
+                f"unknown role {self.role!r} for movement {self.name!r}; "
+                f"expected one of {MOVEMENT_ROLES}"
+            )
+
+    def term(self, graph, hw) -> MovementTerm:
+        bits, iterations = self.form(graph, hw)
+        return MovementTerm(self.name, self.hierarchy, bits, iterations)
+
+
+@dataclass(frozen=True)
+class DataflowSpec:
+    """A complete accelerator dataflow: ordered movement levels + defaults.
+
+    ``hw_factory`` builds the accelerator's default hardware parameters
+    (Table II right column, or this repo's extensions); passing an explicit
+    ``hw`` to :meth:`evaluate` overrides it wholesale.
+    """
+
+    name: str
+    movements: tuple[MovementSpec, ...]
+    hw_factory: Callable[[], object]
+    description: str = ""
+
+    def __post_init__(self) -> None:
+        names = [m.name for m in self.movements]
+        if len(set(names)) != len(names):
+            raise ValueError(f"duplicate movement names in spec {self.name!r}: {names}")
+
+    def resolve_hw(self, hw=None):
+        return self.hw_factory() if hw is None else hw
+
+    def evaluate(self, graph, hw=None, *, extra_meta: Mapping | None = None) -> ModelOutput:
+        """The shared engine: run every movement form and assemble the output."""
+        hw = self.resolve_hw(hw)
+        terms = tuple(m.term(graph, hw) for m in self.movements)
+        meta = {"hw": hw, "graph": graph, "spec": self}
+        if extra_meta:
+            meta = {**meta, **extra_meta}
+        return ModelOutput(accelerator=self.name, terms=terms, meta=meta)
+
+    def movement(self, name: str) -> MovementSpec:
+        for m in self.movements:
+            if m.name == name:
+                return m
+        raise KeyError(f"spec {self.name!r} has no movement {name!r}; "
+                       f"available: {[m.name for m in self.movements]}")
+
+    def by_role(self, role: str) -> tuple[MovementSpec, ...]:
+        if role not in MOVEMENT_ROLES:
+            raise ValueError(f"unknown role {role!r}")
+        return tuple(m for m in self.movements if m.role == role)
+
+
+class SpecModel(AcceleratorModel):
+    """Class-API adapter: an :class:`AcceleratorModel` backed by a spec.
+
+    Subclasses set ``spec`` as a class attribute (EnGNModel, HyGCNModel);
+    ad-hoc instances wrap any spec: ``SpecModel(registry.get("awb_gcn"))``.
+    """
+
+    spec: DataflowSpec
+
+    def __init__(self, spec: DataflowSpec | None = None) -> None:
+        if spec is not None:
+            self.spec = spec
+        if not isinstance(getattr(self, "spec", None), DataflowSpec):
+            raise TypeError(f"{type(self).__name__} has no DataflowSpec bound")
+        self.name = self.spec.name
+
+    def evaluate(self, graph, hw=None) -> ModelOutput:
+        return self.spec.evaluate(graph, hw)

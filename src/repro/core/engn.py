@@ -3,8 +3,10 @@
 EnGN (Liang et al., IEEE TC 2020) processes aggregation and combination
 sequentially on a single M x M' PE array, with a ring-edge-reduce (RER)
 dataflow for aggregation and a dedicated cache (L2*) for high-degree
-vertices.  Each function below implements one row of Table III; the
-:class:`EnGNModel` assembles them into a :class:`~repro.core.terms.ModelOutput`.
+vertices.  Each closed form below implements one row of Table III; the
+rows are assembled declaratively into :data:`ENGN_SPEC`
+(a :class:`~repro.core.dataflow.DataflowSpec`) and evaluated by the shared
+engine — :class:`EnGNModel` is the thin class-API adapter.
 
 Faithfulness notes
 ------------------
@@ -25,54 +27,55 @@ from __future__ import annotations
 
 import numpy as np
 
+from .dataflow import DataflowSpec, MovementSpec, SpecModel
 from .notation import EnGNHardwareParams, GraphTileParams
-from .terms import AcceleratorModel, ModelOutput, MovementTerm, ceil, minimum
+from .terms import ModelOutput, MovementTerm, ceil, minimum
 
-__all__ = ["EnGNModel"]
+__all__ = ["EnGNModel", "ENGN_SPEC"]
 
 
 def _f64(x) -> np.ndarray:
     return np.asarray(x, dtype=np.float64)
 
 
-def loadvertcache(g: GraphTileParams, hw: EnGNHardwareParams) -> MovementTerm:
+def loadvertcache(g: GraphTileParams, hw: EnGNHardwareParams):
     """Row 1: stream the L high-degree vertices from the dedicated cache."""
     N, _, _, L, _ = g.astuple_f64()
     s, Bs, M = _f64(hw.sigma), hw.b_star, _f64(hw.M)
     iters = ceil(L * s / minimum(Bs, M * s))
     bits = minimum(L * s, M * s, Bs) * N * iters
-    return MovementTerm("loadvertcache", "L2*-L1", bits, iters)
+    return bits, iters
 
 
-def loadvertL2(g: GraphTileParams, hw: EnGNHardwareParams) -> MovementTerm:
+def loadvertL2(g: GraphTileParams, hw: EnGNHardwareParams):
     """Row 2: stream the remaining K - L vertices from the L2 bank."""
     N, _, K, L, _ = g.astuple_f64()
     s, B, M = _f64(hw.sigma), _f64(hw.B), _f64(hw.M)
     rem = np.maximum(K - L, 0.0)
     iters = ceil(rem * s / minimum(B, M * s))
     bits = minimum(rem * s, M * s, B) * N * iters
-    return MovementTerm("loadvertL2", "L2-L1", bits, iters)
+    return bits, iters
 
 
-def loadedges(g: GraphTileParams, hw: EnGNHardwareParams) -> MovementTerm:
+def loadedges(g: GraphTileParams, hw: EnGNHardwareParams):
     """Row 3: stream the tile's P edges."""
     _, _, _, _, P = g.astuple_f64()
     s, B = _f64(hw.sigma), _f64(hw.B)
     iters = ceil(P * s / B)
     bits = minimum(P * s, B) * iters
-    return MovementTerm("loadedges", "L2-L1", bits, iters)
+    return bits, iters
 
 
-def loadweights(g: GraphTileParams, hw: EnGNHardwareParams) -> MovementTerm:
+def loadweights(g: GraphTileParams, hw: EnGNHardwareParams):
     """Row 4: load the N x T combination weights, streamed by output column."""
     N, T, _, _, _ = g.astuple_f64()
     s, B, M = _f64(hw.sigma), _f64(hw.B), _f64(hw.M)
     iters = ceil(T * s / minimum(B, M * s))
     bits = minimum(T * s, M * s, B) * N * iters
-    return MovementTerm("loadweights", "L2-L1", bits, iters)
+    return bits, iters
 
 
-def aggregate(g: GraphTileParams, hw: EnGNHardwareParams) -> MovementTerm:
+def aggregate(g: GraphTileParams, hw: EnGNHardwareParams):
     """Row 5: ring-edge-reduce aggregation across the PE array (L1-L1).
 
     Each of the ceil(K/M) vertex groups circulates partial sums around the
@@ -83,36 +86,50 @@ def aggregate(g: GraphTileParams, hw: EnGNHardwareParams) -> MovementTerm:
     s, M = _f64(hw.sigma), _f64(hw.M)
     passes = ceil(K / M) + ceil(K * np.maximum(N - M, 0.0) / M)
     bits = M * (M - 1.0) * T * passes * s
-    return MovementTerm("aggregate", "L1-L1", bits, passes)
+    return bits, passes
 
 
-def writecache(g: GraphTileParams, hw: EnGNHardwareParams) -> MovementTerm:
+def writecache(g: GraphTileParams, hw: EnGNHardwareParams):
     """Row 6: write high-degree vertex results back to the dedicated cache."""
     _, T, _, L, _ = g.astuple_f64()
     s, Bs, M = _f64(hw.sigma), hw.b_star, _f64(hw.M)
     iters = ceil(L * s / minimum(M * s, Bs))
     bits = minimum(M * s, L * s, Bs) * T * iters
-    return MovementTerm("writecache", "L1-L2*", bits, iters)
+    return bits, iters
 
 
-def writeL2(g: GraphTileParams, hw: EnGNHardwareParams) -> MovementTerm:
+def writeL2(g: GraphTileParams, hw: EnGNHardwareParams):
     """Row 7: write the remaining results to the L2 bank."""
     _, T, K, L, _ = g.astuple_f64()
     s, B, M = _f64(hw.sigma), _f64(hw.B), _f64(hw.M)
     rem = np.maximum(K - L, 0.0)
     iters = ceil(rem * s / minimum(M * s, B))
     bits = minimum(M * s, rem * s, B) * T * iters
-    return MovementTerm("writeL2", "L1-L2", bits, iters)
+    return bits, iters
 
 
-_ROWS = (loadvertcache, loadvertL2, loadedges, loadweights, aggregate,
-         writecache, writeL2)
+#: Table III, declaratively: the rows in published order.
+ENGN_SPEC = DataflowSpec(
+    name="engn",
+    movements=(
+        MovementSpec("loadvertcache", "L2*-L1", loadvertcache, role="vertex_in"),
+        MovementSpec("loadvertL2", "L2-L1", loadvertL2, role="vertex_in"),
+        MovementSpec("loadedges", "L2-L1", loadedges, role="edges"),
+        MovementSpec("loadweights", "L2-L1", loadweights, role="weights"),
+        MovementSpec("aggregate", "L1-L1", aggregate, role="compute"),
+        MovementSpec("writecache", "L1-L2*", writecache, role="vertex_out"),
+        MovementSpec("writeL2", "L1-L2", writeL2, role="vertex_out"),
+    ),
+    hw_factory=EnGNHardwareParams,
+    description="EnGN single-array RER dataflow with a high-degree vertex "
+                "cache (Table III).",
+)
 
 
-class EnGNModel(AcceleratorModel):
+class EnGNModel(SpecModel):
     """Table III assembled: the EnGN per-tile data-movement model."""
 
-    name = "engn"
+    spec = ENGN_SPEC
 
     def evaluate(
         self,
@@ -121,24 +138,23 @@ class EnGNModel(AcceleratorModel):
         *,
         include_intertile: bool = False,
     ) -> ModelOutput:
-        hw = hw or EnGNHardwareParams()
-        terms = [row(graph, hw) for row in _ROWS]
+        hw = self.spec.resolve_hw(hw)
+        out = self.spec.evaluate(
+            graph, hw, extra_meta={"include_intertile": include_intertile})
         if include_intertile:
-            nxt_cache = loadvertcache(graph, hw)
-            nxt_l2 = loadvertL2(graph, hw)
-            terms.append(
-                MovementTerm(
+            nxt_cache = out["loadvertcache"]
+            nxt_l2 = out["loadvertL2"]
+            out = ModelOutput(
+                accelerator=out.accelerator,
+                terms=out.terms + (MovementTerm(
                     "intertile",
                     "L2-L1",
                     nxt_cache.data_bits + nxt_l2.data_bits,
                     nxt_cache.iterations + nxt_l2.iterations,
-                )
+                ),),
+                meta=out.meta,
             )
-        return ModelOutput(
-            accelerator=self.name,
-            terms=tuple(terms),
-            meta={"hw": hw, "graph": graph, "include_intertile": include_intertile},
-        )
+        return out
 
     def fitting_factor(self, graph: GraphTileParams, hw: EnGNHardwareParams) -> np.ndarray:
         """EnGN array-fitting factor K*N / M^2 studied in Fig. 6 (M = M')."""

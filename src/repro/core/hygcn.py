@@ -7,45 +7,47 @@ factor Gamma.  Intermediate (aggregated) features cross an inter-phase
 buffer, which is why HyGCN's off-chip-class movement exceeds EnGN's at
 matched parameters (Sec. IV-B).
 
-Each function implements one row of Table IV.  P_s (edges surviving HyGCN's
-window sliding) is modelled as ``Ps_ratio * P`` with the paper's default
-P_s ~ P (ratio 1).
+Each closed form implements one row of Table IV; the rows are assembled
+declaratively into :data:`HYGCN_SPEC` and evaluated by the shared engine in
+:mod:`repro.core.dataflow`.  P_s (edges surviving HyGCN's window sliding)
+is modelled as ``Ps_ratio * P`` with the paper's default P_s ~ P (ratio 1).
 """
 
 from __future__ import annotations
 
 import numpy as np
 
+from .dataflow import DataflowSpec, MovementSpec, SpecModel
 from .notation import GraphTileParams, HyGCNHardwareParams
-from .terms import AcceleratorModel, ModelOutput, MovementTerm, ceil, minimum
+from .terms import ceil, minimum
 
-__all__ = ["HyGCNModel"]
+__all__ = ["HyGCNModel", "HYGCN_SPEC"]
 
 
 def _f64(x) -> np.ndarray:
     return np.asarray(x, dtype=np.float64)
 
 
-def loadvertL2(g: GraphTileParams, hw: HyGCNHardwareParams) -> MovementTerm:
+def loadvertL2(g: GraphTileParams, hw: HyGCNHardwareParams):
     """Row 1: stream all K vertices of the tile into the aggregation engine."""
     N, _, K, _, _ = g.astuple_f64()
     s, B, Ma = _f64(hw.sigma), _f64(hw.B), _f64(hw.Ma)
     iters = ceil(K * s / minimum(B, Ma * s))
     bits = minimum(K * s, Ma * s, B) * N * iters
-    return MovementTerm("loadvertL2", "L2-L1", bits, iters)
+    return bits, iters
 
 
-def loadedges(g: GraphTileParams, hw: HyGCNHardwareParams) -> MovementTerm:
+def loadedges(g: GraphTileParams, hw: HyGCNHardwareParams):
     """Row 2: stream the P_s window-slid edges."""
     _, _, _, _, P = g.astuple_f64()
     s, B = _f64(hw.sigma), _f64(hw.B)
     Ps = hw.Ps(P)
     iters = ceil(Ps * s / B)
     bits = minimum(Ps * s, B) * iters
-    return MovementTerm("loadedges", "L2-L1", bits, iters)
+    return bits, iters
 
 
-def loadweights(g: GraphTileParams, hw: HyGCNHardwareParams) -> MovementTerm:
+def loadweights(g: GraphTileParams, hw: HyGCNHardwareParams):
     """Row 3: load the (1 - Gamma) non-reused fraction of the N x T weights."""
     N, T, _, _, _ = g.astuple_f64()
     s, B, Mc = _f64(hw.sigma), _f64(hw.B), _f64(hw.Mc)
@@ -53,72 +55,75 @@ def loadweights(g: GraphTileParams, hw: HyGCNHardwareParams) -> MovementTerm:
     fresh = N * T * s * (1.0 - gamma)
     iters = ceil(fresh / minimum(B, Mc * s))
     bits = minimum(fresh, Mc * s, B) * iters
-    return MovementTerm("loadweights", "L2-L1", bits, iters)
+    return bits, iters
 
 
-def aggregate(g: GraphTileParams, hw: HyGCNHardwareParams) -> MovementTerm:
+def aggregate(g: GraphTileParams, hw: HyGCNHardwareParams):
     """Row 4: SIMD aggregation — every core handles <= 8 feature components."""
     N, _, _, _, P = g.astuple_f64()
     s, Ma = _f64(hw.sigma), _f64(hw.Ma)
     Ps = hw.Ps(P)
     iters = ceil(N * Ps * s / (Ma * 8.0))
     bits = minimum(N * Ps * s, Ma * 8.0) * iters
-    return MovementTerm("aggregate", "L1-L1", bits, iters)
+    return bits, iters
 
 
-def writeinterphase(g: GraphTileParams, hw: HyGCNHardwareParams) -> MovementTerm:
+def writeinterphase(g: GraphTileParams, hw: HyGCNHardwareParams):
     """Row 5: spill aggregated K x N features to the inter-phase buffer."""
     N, _, K, _, _ = g.astuple_f64()
     s, B = _f64(hw.sigma), _f64(hw.B)
     iters = ceil(K * N * s / B)
     bits = minimum(K * N * s, B) * iters
-    return MovementTerm("writeinterphase", "L1-L2", bits, iters)
+    return bits, iters
 
 
-def combine(g: GraphTileParams, hw: HyGCNHardwareParams) -> MovementTerm:
+def combine(g: GraphTileParams, hw: HyGCNHardwareParams):
     """Row 6: systolic matrix-vector combination (single on-array pass)."""
     N, T, K, _, _ = g.astuple_f64()
     s = _f64(hw.sigma)
     bits = K * N * s + N * T * s
-    return MovementTerm("combine", "L1-L1", bits, np.ones_like(bits))
+    return bits, np.ones_like(bits)
 
 
-def readinterphase(g: GraphTileParams, hw: HyGCNHardwareParams) -> MovementTerm:
+def readinterphase(g: GraphTileParams, hw: HyGCNHardwareParams):
     """Row 7: the combination engine fetches aggregated features back."""
     N, _, _, _, P = g.astuple_f64()
     s, B, Mc = _f64(hw.sigma), _f64(hw.B), _f64(hw.Mc)
     Ps = hw.Ps(P)
     iters = ceil(Ps * N * s / minimum(B, Mc))
     bits = minimum(Ps * N * s, B, Mc) * iters
-    return MovementTerm("readinterphase", "L2-L1", bits, iters)
+    return bits, iters
 
 
-def writeL2(g: GraphTileParams, hw: HyGCNHardwareParams) -> MovementTerm:
+def writeL2(g: GraphTileParams, hw: HyGCNHardwareParams):
     """Row 8: write the K x T output features to the output buffer."""
     _, T, K, _, _ = g.astuple_f64()
     s, B = _f64(hw.sigma), _f64(hw.B)
     iters = ceil(K * T * s / B)
     bits = minimum(K * T * s, B) * iters
-    return MovementTerm("writeL2", "L1-L2", bits, iters)
+    return bits, iters
 
 
-_ROWS = (loadvertL2, loadedges, loadweights, aggregate, writeinterphase,
-         combine, readinterphase, writeL2)
+#: Table IV, declaratively: the rows in published order.
+HYGCN_SPEC = DataflowSpec(
+    name="hygcn",
+    movements=(
+        MovementSpec("loadvertL2", "L2-L1", loadvertL2, role="vertex_in"),
+        MovementSpec("loadedges", "L2-L1", loadedges, role="edges"),
+        MovementSpec("loadweights", "L2-L1", loadweights, role="weights"),
+        MovementSpec("aggregate", "L1-L1", aggregate, role="compute"),
+        MovementSpec("writeinterphase", "L1-L2", writeinterphase, role="interphase"),
+        MovementSpec("combine", "L1-L1", combine, role="compute"),
+        MovementSpec("readinterphase", "L2-L1", readinterphase, role="interphase"),
+        MovementSpec("writeL2", "L1-L2", writeL2, role="vertex_out"),
+    ),
+    hw_factory=HyGCNHardwareParams,
+    description="HyGCN dual-engine (SIMD aggregation + systolic combination) "
+                "dataflow with an inter-phase buffer (Table IV).",
+)
 
 
-class HyGCNModel(AcceleratorModel):
+class HyGCNModel(SpecModel):
     """Table IV assembled: the HyGCN per-tile data-movement model."""
 
-    name = "hygcn"
-
-    def evaluate(
-        self,
-        graph: GraphTileParams,
-        hw: HyGCNHardwareParams | None = None,
-    ) -> ModelOutput:
-        hw = hw or HyGCNHardwareParams()
-        return ModelOutput(
-            accelerator=self.name,
-            terms=tuple(row(graph, hw) for row in _ROWS),
-            meta={"hw": hw, "graph": graph},
-        )
+    spec = HYGCN_SPEC

@@ -31,6 +31,8 @@ __all__ = [
     "GraphTileParams",
     "EnGNHardwareParams",
     "HyGCNHardwareParams",
+    "TiledSpMMHardwareParams",
+    "AWBGCNHardwareParams",
     "PAPER_DEFAULT_GRAPH",
     "PAPER_DEFAULT_ENGN",
     "PAPER_DEFAULT_HYGCN",
@@ -124,6 +126,64 @@ class HyGCNHardwareParams:
         return _f64(P) * _f64(self.Ps_ratio)
 
     def replace(self, **kw: ParamArray) -> "HyGCNHardwareParams":
+        return dataclasses.replace(self, **kw)
+
+
+@dataclass(frozen=True)
+class TiledSpMMHardwareParams:
+    """Generic tiled block-dense SpMM accelerator (this repo's extension).
+
+    The TPU/Pallas analogue of the paper's dataflows: the adjacency is tiled
+    into (Bn x Bk) dense blocks and aggregation+combination are fused on one
+    matrix unit, so no inter-phase buffer term exists (DESIGN.md §3/§7).
+    ``Bn``/``Bk`` mirror ``DEFAULT_BLOCK_N``/``DEFAULT_BLOCK_K`` of
+    :mod:`repro.kernels.edge_aggregate` — keep them in sync (asserted in
+    tests when jax is importable).
+
+    Attributes:
+      sigma: bit precision of a feature element.
+      B: L2 (HBM) bandwidth, bits/iteration.
+      Bn: destination-vertex rows per adjacency block.
+      Bk: source-vertex columns per adjacency block.
+      sigma_adj: bit precision of one adjacency-block element (block-dense
+          storage keeps explicit zeros, so topology traffic is dense).
+    """
+
+    sigma: ParamArray = 4
+    B: ParamArray = 1000
+    Bn: ParamArray = 256
+    Bk: ParamArray = 256
+    sigma_adj: ParamArray = 4
+
+    def replace(self, **kw: ParamArray) -> "TiledSpMMHardwareParams":
+        return dataclasses.replace(self, **kw)
+
+
+@dataclass(frozen=True)
+class AWBGCNHardwareParams:
+    """AWB-GCN-style column-balanced dataflow (this repo's extension).
+
+    AWB-GCN (Geng et al., MICRO 2020) performs column-wise-product SpMM on
+    M PEs with an autotuning workload balancer; partial output columns are
+    accumulated on-chip and a fraction ``rho`` of partial results is rerouted
+    between PEs per autotuning round (DESIGN.md §7).
+
+    Attributes:
+      sigma: bit precision.
+      B: L2 memory bandwidth, bits/iteration.
+      M: number of PEs (AWB-GCN's published design point is 4096).
+      eta: workload-balance efficiency achieved by the autotuner,
+          0 < eta <= 1 (fraction of peak PE utilization).
+      rho: fraction of partial results rerouted by the balancer.
+    """
+
+    sigma: ParamArray = 4
+    B: ParamArray = 1000
+    M: ParamArray = 4096
+    eta: ParamArray = 0.85
+    rho: ParamArray = 0.1
+
+    def replace(self, **kw: ParamArray) -> "AWBGCNHardwareParams":
         return dataclasses.replace(self, **kw)
 
 

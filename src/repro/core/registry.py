@@ -1,0 +1,67 @@
+"""Accelerator registry: resolve any registered dataflow by name.
+
+The paper's goal is *comparative* analysis of vastly different GNN
+accelerators; the registry is the single point where the sweep engine
+(:mod:`repro.core.sweep`), validation (:mod:`repro.core.validation`),
+benchmarks, and examples look accelerators up.  Adding an accelerator is
+now: write a :class:`~repro.core.dataflow.DataflowSpec` and call
+:func:`register` — no sweep/benchmark/example code changes.
+
+Built-in entries: ``engn`` and ``hygcn`` (Tables III/IV of the paper),
+``spmm_tiled`` (the repo's fused block-dense Pallas-kernel analogue), and
+``awb_gcn`` (column-balanced dataflow, MICRO 2020) — see DESIGN.md §4/§7.
+"""
+
+from __future__ import annotations
+
+from .awb_gcn import AWB_GCN_SPEC
+from .dataflow import DataflowSpec, SpecModel
+from .engn import ENGN_SPEC
+from .hygcn import HYGCN_SPEC
+from .spmm_tiled import SPMM_TILED_SPEC
+from .terms import ModelOutput
+
+__all__ = ["register", "get", "names", "specs", "model", "evaluate"]
+
+_REGISTRY: dict[str, DataflowSpec] = {}
+
+
+def register(spec: DataflowSpec, *, overwrite: bool = False) -> DataflowSpec:
+    """Register a dataflow spec under its own name; returns it for chaining."""
+    if not isinstance(spec, DataflowSpec):
+        raise TypeError(f"expected DataflowSpec, got {type(spec).__name__}")
+    if spec.name in _REGISTRY and not overwrite:
+        raise ValueError(f"accelerator {spec.name!r} already registered "
+                         f"(pass overwrite=True to replace)")
+    _REGISTRY[spec.name] = spec
+    return spec
+
+
+def get(name: str) -> DataflowSpec:
+    try:
+        return _REGISTRY[name]
+    except KeyError:
+        raise KeyError(f"unknown accelerator {name!r}; registered: {names()}") from None
+
+
+def names() -> tuple[str, ...]:
+    return tuple(_REGISTRY)
+
+
+def specs() -> tuple[DataflowSpec, ...]:
+    return tuple(_REGISTRY.values())
+
+
+def model(name: str) -> SpecModel:
+    """A class-API model wrapping the named spec."""
+    return SpecModel(get(name))
+
+
+def evaluate(name: str, graph, hw=None) -> ModelOutput:
+    """Resolve + evaluate in one call (the common sweep-engine path)."""
+    return get(name).evaluate(graph, hw)
+
+
+for _spec in (ENGN_SPEC, HYGCN_SPEC, SPMM_TILED_SPEC, AWB_GCN_SPEC):
+    register(_spec)
+del _spec

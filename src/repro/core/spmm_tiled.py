@@ -1,0 +1,135 @@
+"""Tiled block-dense SpMM baseline — the TPU/Pallas analogue as a dataflow.
+
+This is the analytical counterpart of the fused Pallas kernel in
+:mod:`repro.kernels.edge_aggregate`: the adjacency of a K-vertex tile is
+cut into (Bn x Bk) dense blocks, each block-step performs
+``acc += A[i,j] @ X[j]`` on the matrix unit, and on the last source block
+the combine weight is applied straight out of the accumulator — so, unlike
+HyGCN, there is **no inter-phase buffer movement level at all**.  The block
+sizes default to the kernel's ``DEFAULT_BLOCK_N``/``DEFAULT_BLOCK_K``.
+
+The price of the fusion shows up in topology traffic: block-dense storage
+streams ``ceil(K/Bn)*ceil(K/Bk)`` full dense blocks regardless of sparsity,
+where EnGN/HyGCN stream only the P edges.  The comparison between
+``loadadjblocks`` here and ``loadedges`` there is exactly the
+density-threshold question the kernel's DESIGN.md §3 entry records.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+from .dataflow import DataflowSpec, MovementSpec, SpecModel
+from .notation import GraphTileParams, TiledSpMMHardwareParams
+from .terms import ceil, minimum
+
+__all__ = ["TiledSpMMModel", "SPMM_TILED_SPEC", "kernel_matched_hw"]
+
+
+def _f64(x) -> np.ndarray:
+    return np.asarray(x, dtype=np.float64)
+
+
+def _blocks(g: GraphTileParams, hw: TiledSpMMHardwareParams):
+    _, _, K, _, _ = g.astuple_f64()
+    nbn = ceil(K / _f64(hw.Bn))
+    nbk = ceil(K / _f64(hw.Bk))
+    return nbn, nbk
+
+
+def loadadjblocks(g: GraphTileParams, hw: TiledSpMMHardwareParams):
+    """Stream every (Bn x Bk) dense adjacency block once (zeros included)."""
+    s_adj, B = _f64(hw.sigma_adj), _f64(hw.B)
+    Bn, Bk = _f64(hw.Bn), _f64(hw.Bk)
+    nbn, nbk = _blocks(g, hw)
+    block_bits = Bn * Bk * s_adj
+    iters = nbn * nbk * ceil(block_bits / B)
+    bits = nbn * nbk * block_bits
+    return bits, iters
+
+
+def loadvertblocks(g: GraphTileParams, hw: TiledSpMMHardwareParams):
+    """Stream each (Bk x N) feature block once per destination block row."""
+    N, _, _, _, _ = g.astuple_f64()
+    s, B, Bk = _f64(hw.sigma), _f64(hw.B), _f64(hw.Bk)
+    nbn, nbk = _blocks(g, hw)
+    block_bits = Bk * N * s
+    iters = nbn * nbk * ceil(block_bits / B)
+    bits = nbn * nbk * block_bits
+    return bits, iters
+
+
+def loadweights(g: GraphTileParams, hw: TiledSpMMHardwareParams):
+    """Load the (N x T) combine weight once per destination block row."""
+    N, T, _, _, _ = g.astuple_f64()
+    s, B = _f64(hw.sigma), _f64(hw.B)
+    nbn, _ = _blocks(g, hw)
+    iters = nbn * ceil(N * T * s / B)
+    bits = nbn * N * T * s
+    return bits, iters
+
+
+def accumulate(g: GraphTileParams, hw: TiledSpMMHardwareParams):
+    """VMEM accumulator read+write per block-step (the MXU aggregation)."""
+    N, _, _, _, _ = g.astuple_f64()
+    s, Bn = _f64(hw.sigma), _f64(hw.Bn)
+    nbn, nbk = _blocks(g, hw)
+    bits = 2.0 * nbn * nbk * Bn * N * s
+    return bits, nbn * nbk
+
+
+def combinefuse(g: GraphTileParams, hw: TiledSpMMHardwareParams):
+    """Fused combine: one accumulator read + output-tile write per dst block."""
+    N, T, _, _, _ = g.astuple_f64()
+    s, Bn = _f64(hw.sigma), _f64(hw.Bn)
+    nbn, _ = _blocks(g, hw)
+    bits = nbn * Bn * (N + T) * s
+    return bits, nbn
+
+
+def writeout(g: GraphTileParams, hw: TiledSpMMHardwareParams):
+    """Write the padded (ceil(K/Bn)*Bn x T) output tiles back to L2."""
+    _, T, _, _, _ = g.astuple_f64()
+    s, B, Bn = _f64(hw.sigma), _f64(hw.B), _f64(hw.Bn)
+    nbn, _ = _blocks(g, hw)
+    tile_bits = Bn * T * s
+    iters = nbn * ceil(tile_bits / B)
+    bits = nbn * tile_bits
+    return bits, iters
+
+
+SPMM_TILED_SPEC = DataflowSpec(
+    name="spmm_tiled",
+    movements=(
+        MovementSpec("loadadjblocks", "L2-L1", loadadjblocks, role="edges"),
+        MovementSpec("loadvertblocks", "L2-L1", loadvertblocks, role="vertex_in"),
+        MovementSpec("loadweights", "L2-L1", loadweights, role="weights"),
+        MovementSpec("accumulate", "L1-L1", accumulate, role="compute"),
+        MovementSpec("combinefuse", "L1-L1", combinefuse, role="compute"),
+        MovementSpec("writeout", "L1-L2", writeout, role="vertex_out"),
+    ),
+    hw_factory=TiledSpMMHardwareParams,
+    description="Generic fused block-dense SpMM (the repo's Pallas-kernel "
+                "analogue): no inter-phase buffer, dense topology blocks.",
+)
+
+
+def kernel_matched_hw(**overrides) -> TiledSpMMHardwareParams:
+    """Hardware params with Bn/Bk taken from the live Pallas kernel module.
+
+    Falls back to the notation defaults when jax/pallas is not importable
+    (the kernel module hard-imports both).
+    """
+    try:
+        from ..kernels.edge_aggregate import DEFAULT_BLOCK_K, DEFAULT_BLOCK_N
+        overrides.setdefault("Bn", DEFAULT_BLOCK_N)
+        overrides.setdefault("Bk", DEFAULT_BLOCK_K)
+    except Exception:  # pragma: no cover - jax always present in CI
+        pass
+    return TiledSpMMHardwareParams(**overrides)
+
+
+class TiledSpMMModel(SpecModel):
+    """Class-API adapter for the tiled-SpMM baseline."""
+
+    spec = SPMM_TILED_SPEC

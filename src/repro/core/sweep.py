@@ -1,26 +1,35 @@
-"""Parameter-sweep engine reproducing the paper's Figures 3-7.
+"""Parameter-sweep engine reproducing the paper's Figures 3-7 — and beyond.
 
-All closed forms in :mod:`repro.core.engn` / :mod:`repro.core.hygcn`
-broadcast, so a 2-D sweep is a single evaluation over ``np.meshgrid`` inputs
-— no Python loops.  Each ``figN_*`` function mirrors one figure of the paper
-at its Sec. IV defaults (N=30, T=5, B=1000, sigma=4, P=10K) and returns a
-:class:`SweepResult` with labelled axes and a per-term breakdown grid.
+All closed forms in the registered dataflow specs broadcast, so a 2-D sweep
+is a single evaluation over ``np.meshgrid`` inputs — no Python loops.  Each
+``figN_*`` function mirrors one figure of the paper at its Sec. IV defaults
+(N=30, T=5, B=1000, sigma=4, P=10K) and returns a :class:`SweepResult` with
+labelled axes and a per-term breakdown grid.
+
+Accelerators are resolved by name through :mod:`repro.core.registry`;
+:func:`sweep_accelerators` broadcasts one parameter grid across *every*
+registered dataflow in a single vectorized evaluation per accelerator and
+stacks the results along a leading accelerator axis
+(:class:`AcceleratorSweepResult`) — the comparative study the paper's
+Sec. IV narrates, for any number of dataflows.
 """
 
 from __future__ import annotations
 
 from dataclasses import dataclass, field
-from typing import Mapping
+from typing import Mapping, Sequence
 
 import numpy as np
 
+from . import registry
 from .engn import EnGNModel
-from .hygcn import HyGCNModel
-from .notation import (EnGNHardwareParams, GraphTileParams,
-                       HyGCNHardwareParams, paper_default_graph)
+from .notation import EnGNHardwareParams, GraphTileParams, paper_default_graph
+from .terms import CACHE_CLASSES, L1_CLASSES, L2_CLASSES
 
 __all__ = [
     "SweepResult",
+    "AcceleratorSweepResult",
+    "sweep_accelerators",
     "fig3_engn_movement",
     "fig4_hygcn_movement",
     "fig5_iterations_vs_bandwidth",
@@ -34,6 +43,27 @@ __all__ = [
 DEFAULT_K_SWEEP = np.array([64, 128, 256, 512, 1024, 2048, 4096, 8192], dtype=np.float64)
 DEFAULT_M_SWEEP = np.array([4, 8, 16, 32, 64, 128, 256], dtype=np.float64)
 DEFAULT_B_SWEEP = np.logspace(1, 5, 33, dtype=np.float64)  # 10 .. 100k bits/iter
+
+
+def _flatten_columns(axes: Mapping[str, np.ndarray],
+                     columns: Mapping[str, np.ndarray]) -> tuple[list[str], np.ndarray]:
+    """One np.stack flatten: (column names, (n_cells, n_cols) float matrix).
+
+    Axis columns come first (meshgrid order), then the value columns
+    broadcast to the grid shape and raveled.  This replaces the former
+    per-record Python loop: a whole sweep flattens in one vectorized shot.
+    """
+    names = list(axes)
+    grids = np.meshgrid(*[axes[n] for n in names], indexing="ij")
+    shape = grids[0].shape if grids else ()
+    cols = names + list(columns)
+    mat = np.stack(
+        [g.ravel() for g in grids]
+        + [np.broadcast_to(np.asarray(v, np.float64), shape).ravel()
+           for v in columns.values()],
+        axis=1,
+    )
+    return cols, mat
 
 
 @dataclass(frozen=True)
@@ -56,23 +86,107 @@ class SweepResult:
 
     def rows(self) -> list[dict[str, float]]:
         """Flatten to records — the benchmark harness prints these as CSV."""
-        names = list(self.axes)
-        grids = np.meshgrid(*[self.axes[n] for n in names], indexing="ij")
-        out: list[dict[str, float]] = []
-        total_b = np.broadcast_to(self.total_bits, grids[0].shape)
-        total_i = np.broadcast_to(self.total_iterations, grids[0].shape)
-        for idx in np.ndindex(grids[0].shape):
-            rec = {n: float(g[idx]) for n, g in zip(names, grids)}
-            rec["total_bits"] = float(total_b[idx])
-            rec["total_iterations"] = float(total_i[idx])
-            for term, arr in self.data_bits.items():
-                rec[f"bits_{term}"] = float(np.broadcast_to(arr, grids[0].shape)[idx])
-            out.append(rec)
+        columns = {"total_bits": self.total_bits,
+                   "total_iterations": self.total_iterations}
+        columns.update({f"bits_{term}": arr for term, arr in self.data_bits.items()})
+        cols, mat = _flatten_columns(self.axes, columns)
+        return [dict(zip(cols, row)) for row in mat.tolist()]
+
+
+@dataclass(frozen=True)
+class AcceleratorSweepResult:
+    """A sweep stacked across accelerators: arrays have shape (A, *grid).
+
+    ``total_bits`` / ``total_iterations`` / the per-hierarchy-class maps all
+    carry a leading axis indexed by ``accelerators``; a row dump tags each
+    record with its accelerator name.
+    """
+
+    figure: str
+    accelerators: tuple[str, ...]
+    axes: Mapping[str, np.ndarray]
+    total_bits: np.ndarray
+    total_iterations: np.ndarray
+    class_bits: Mapping[str, np.ndarray]   # offchip / cache / onchip -> (A, *grid)
+    meta: Mapping[str, object] = field(default_factory=dict)
+
+    def accelerator_index(self, name: str) -> int:
+        return self.accelerators.index(name)
+
+    def rows(self) -> list[dict[str, object]]:
+        out: list[dict[str, object]] = []
+        for a, name in enumerate(self.accelerators):
+            columns = {"total_bits": self.total_bits[a],
+                       "total_iterations": self.total_iterations[a]}
+            columns.update({f"bits_{cls}": arr[a]
+                            for cls, arr in self.class_bits.items()})
+            cols, mat = _flatten_columns(self.axes, columns)
+            out.extend({"accelerator": name, **dict(zip(cols, row))}
+                       for row in mat.tolist())
         return out
 
 
 def _grid(*axes: np.ndarray) -> tuple[np.ndarray, ...]:
     return tuple(np.meshgrid(*axes, indexing="ij"))
+
+
+def sweep_accelerators(
+    accelerators: Sequence[str] | None = None,
+    K: np.ndarray = DEFAULT_K_SWEEP,
+    *,
+    graph: GraphTileParams | None = None,
+    axes: Mapping[str, np.ndarray] | None = None,
+    figure: str = "sweep_accelerators",
+) -> AcceleratorSweepResult:
+    """Evaluate every (registered) accelerator over one grid, stacked.
+
+    Each dataflow is evaluated **once** on the whole array-valued grid at
+    its default hardware parameters; the per-accelerator totals are then
+    ``np.stack``-ed along a leading accelerator axis.  Pass ``graph`` to
+    sweep a custom array-valued tile instead of the Sec. IV defaults; when
+    exactly one graph field is array-valued the sweep axis is inferred,
+    otherwise label the grid explicitly via ``axes`` (meshgrid ``ij``
+    order, like :class:`SweepResult`).
+    """
+    names = tuple(accelerators) if accelerators is not None else registry.names()
+    K = np.atleast_1d(np.asarray(K, np.float64))
+    g = graph if graph is not None else paper_default_graph(K)
+    shape = np.broadcast_shapes(*(np.shape(v) for v in g.astuple_f64()))
+    if graph is None:
+        axes = {"K": K}
+    elif axes is None:
+        arr_fields = {f: np.asarray(getattr(g, f), np.float64)
+                      for f in ("N", "T", "K", "L", "P")
+                      if np.ndim(getattr(g, f)) == 1}
+        if len(arr_fields) != 1:
+            raise ValueError(
+                "cannot infer the sweep axes of a custom graph with "
+                f"{len(arr_fields)} 1-D array-valued fields; pass axes= "
+                "naming the grid explicitly")
+        axes = arr_fields
+    grid_shape = tuple(len(np.atleast_1d(v)) for v in axes.values())
+    if grid_shape != shape:
+        raise ValueError(f"axes grid shape {grid_shape} does not match the "
+                         f"graph broadcast shape {shape}")
+    outputs = [registry.evaluate(name, g) for name in names]
+
+    def stack(fn):
+        return np.stack([np.broadcast_to(fn(o), shape) for o in outputs])
+
+    return AcceleratorSweepResult(
+        figure=figure,
+        accelerators=names,
+        axes={k: np.atleast_1d(np.asarray(v, np.float64))
+              for k, v in axes.items()},
+        total_bits=stack(lambda o: o.total_bits()),
+        total_iterations=stack(lambda o: o.total_iterations()),
+        class_bits={
+            "offchip": stack(lambda o: o.total_bits(L2_CLASSES)),
+            "cache": stack(lambda o: o.total_bits(CACHE_CLASSES)),
+            "onchip": stack(lambda o: o.total_bits(L1_CLASSES)),
+        },
+        meta={"outputs": tuple(outputs)},
+    )
 
 
 def fig3_engn_movement(
@@ -86,7 +200,7 @@ def fig3_engn_movement(
     Kg, Mg = _grid(np.asarray(K, np.float64), np.asarray(M, np.float64))
     graph = paper_default_graph(Kg)
     hw = EnGNHardwareParams(M=Mg, M_prime=Mg)
-    out = EnGNModel().evaluate(graph, hw)
+    out = registry.evaluate("engn", graph, hw)
     return SweepResult(
         figure="fig3",
         axes={"K": np.asarray(K, np.float64), "M": np.asarray(M, np.float64)},
@@ -103,8 +217,8 @@ def fig4_hygcn_movement(
     """Fig. 4: HyGCN per-level data movement across tile size and SIMD cores."""
     Kg, Mag = _grid(np.asarray(K, np.float64), np.asarray(Ma, np.float64))
     graph = paper_default_graph(Kg)
-    hw = HyGCNHardwareParams(Ma=Mag)
-    out = HyGCNModel().evaluate(graph, hw)
+    spec = registry.get("hygcn")
+    out = spec.evaluate(graph, spec.hw_factory().replace(Ma=Mag))
     return SweepResult(
         figure="fig4",
         axes={"K": np.asarray(K, np.float64), "Ma": np.asarray(Ma, np.float64)},
@@ -119,17 +233,19 @@ def fig5_iterations_vs_bandwidth(
     B: np.ndarray = DEFAULT_B_SWEEP,
     K: np.ndarray = np.array([256, 1024, 4096], dtype=np.float64),
 ) -> SweepResult:
-    """Fig. 5(a)/(b): total iterations vs memory bandwidth per workload size."""
+    """Fig. 5(a)/(b): total iterations vs memory bandwidth per workload size.
+
+    Any registered accelerator works — every hardware record has a ``B``
+    (L2 bandwidth) field to sweep.
+    """
     Bg, Kg = _grid(np.asarray(B, np.float64), np.asarray(K, np.float64))
     graph = paper_default_graph(Kg)
-    if accelerator == "engn":
-        out = EnGNModel().evaluate(graph, EnGNHardwareParams(B=Bg))
-    elif accelerator == "hygcn":
-        out = HyGCNModel().evaluate(graph, HyGCNHardwareParams(B=Bg))
-    else:
-        raise ValueError(f"unknown accelerator {accelerator!r}")
+    spec = registry.get(accelerator)
+    out = spec.evaluate(graph, spec.hw_factory().replace(B=Bg))
+    figure = {"engn": "fig5a", "hygcn": "fig5b"}.get(accelerator,
+                                                     f"fig5_{accelerator}")
     return SweepResult(
-        figure="fig5a" if accelerator == "engn" else "fig5b",
+        figure=figure,
         axes={"B": np.asarray(B, np.float64), "K": np.asarray(K, np.float64)},
         data_bits=out.breakdown(),
         iterations=out.iteration_breakdown(),
@@ -164,7 +280,8 @@ def fig7_systolic_reuse(
     """Fig. 7: HyGCN loadweights movement vs systolic reuse Gamma and depth N."""
     Gg, Ng = _grid(np.asarray(gamma, np.float64), np.asarray(N, np.float64))
     graph = paper_default_graph(1024.0).replace(N=Ng)
-    out = HyGCNModel().evaluate(graph, HyGCNHardwareParams(gamma=Gg))
+    spec = registry.get("hygcn")
+    out = spec.evaluate(graph, spec.hw_factory().replace(gamma=Gg))
     return SweepResult(
         figure="fig7",
         axes={"gamma": np.asarray(gamma, np.float64), "N": np.asarray(N, np.float64)},

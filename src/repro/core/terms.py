@@ -129,6 +129,21 @@ class ModelOutput:
         terms = self.select(hierarchies)
         return sum((t.iterations for t in terms), start=_f64(0.0))
 
+    def scaled(self, factor) -> "ModelOutput":
+        """Every term's bits and iterations multiplied by ``factor``.
+
+        The composition layer uses this to repeat a per-tile evaluation over
+        a tile schedule (:mod:`repro.core.compose`).
+        """
+        f = _f64(factor)
+        return ModelOutput(
+            accelerator=self.accelerator,
+            terms=tuple(MovementTerm(t.name, t.hierarchy,
+                                     t.data_bits * f, t.iterations * f)
+                        for t in self.terms),
+            meta=self.meta,
+        )
+
     def breakdown(self) -> dict[str, np.ndarray]:
         return {t.name: t.data_bits for t in self.terms}
 

@@ -23,7 +23,23 @@ from typing import Callable, Optional
 from .hlo_analysis import CollectiveStats, parse_collectives
 from .tpu_model import CommModel
 
-__all__ = ["ValidationRecord", "validate_traffic", "measured_collective_bytes"]
+__all__ = [
+    "ValidationRecord",
+    "validate_traffic",
+    "measured_collective_bytes",
+    "SEC4_GOLDEN_TOTALS",
+    "validate_dataflow_golden",
+    "crosscheck_registry",
+]
+
+#: Seed-implementation (total_bits, total_iterations) at the paper's Sec. IV
+#: defaults (N=30, T=5, K=1024, L=102, P=10240, B=1000, sigma=4), captured
+#: before the DataflowSpec refactor.  Any registry-evaluated drift from these
+#: is a modelling regression, not an interpretation change (DESIGN.md §8).
+SEC4_GOLDEN_TOTALS: dict[str, tuple[float, float]] = {
+    "engn": (2800200.0, 68.0),
+    "hygcn": (2889460.0, 6248.0),
+}
 
 
 @dataclass(frozen=True)
@@ -64,3 +80,49 @@ def validate_traffic(name: str, model: CommModel, compiled, *,
         analytical_bytes=model.total("ici") / max(static_trip_count, 1),
         measured_bytes=stats.total_wire_bytes_per_chip,
     )
+
+
+def validate_dataflow_golden(name: str) -> ValidationRecord:
+    """Registry-evaluated total vs the seed golden value at Sec. IV defaults.
+
+    The refactored DataflowSpec engine must be *bit-identical* to the seed
+    row-function implementation, so a passing record has ratio exactly 1.0.
+    """
+    from . import registry
+    from .notation import paper_default_graph
+
+    if name not in SEC4_GOLDEN_TOTALS:
+        raise KeyError(f"no golden totals recorded for {name!r}; "
+                       f"have: {sorted(SEC4_GOLDEN_TOTALS)}")
+    out = registry.evaluate(name, paper_default_graph())
+    return ValidationRecord(
+        name=f"{name}_sec4_golden",
+        analytical_bytes=float(out.total_bits()),
+        measured_bytes=SEC4_GOLDEN_TOTALS[name][0],
+    )
+
+
+def crosscheck_registry(graph=None) -> dict[str, "ValidationRecord | None"]:
+    """Structural sanity over every registered dataflow at one operating point.
+
+    Evaluates each spec (finite, non-negative bits/iterations are asserted)
+    and returns a golden-comparison record where one exists, else None.
+    """
+    import numpy as np
+
+    from . import registry
+    from .notation import paper_default_graph
+
+    g = graph if graph is not None else paper_default_graph()
+    records: dict[str, ValidationRecord | None] = {}
+    for name in registry.names():
+        out = registry.evaluate(name, g)
+        for t in out.terms:
+            if not (np.all(np.isfinite(t.data_bits))
+                    and np.all(np.isfinite(t.iterations))):
+                raise AssertionError(f"{name}.{t.name}: non-finite movement")
+            if np.any(t.data_bits < 0) or np.any(t.iterations < 0):
+                raise AssertionError(f"{name}.{t.name}: negative movement")
+        records[name] = (validate_dataflow_golden(name)
+                        if name in SEC4_GOLDEN_TOTALS else None)
+    return records

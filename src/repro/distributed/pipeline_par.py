@@ -19,6 +19,8 @@ from typing import Callable
 
 import jax
 import jax.numpy as jnp
+
+from ..compat import shard_map
 from jax.sharding import Mesh, PartitionSpec as P
 
 Array = jax.Array
@@ -64,7 +66,7 @@ def gpipe_apply(stage_fn: Callable, stage_params, x_micro: Array, *,
             jnp.where(r == n_stages - 1, outs, jnp.zeros_like(outs)), axis)
         return outs
 
-    return jax.shard_map(
+    return shard_map(
         local, mesh=mesh,
         in_specs=(P(axis), P()),
         out_specs=P(),

@@ -29,6 +29,8 @@ from typing import Optional
 
 import jax
 import jax.numpy as jnp
+
+from ..compat import shard_map
 import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
@@ -144,7 +146,7 @@ def allgather_spmm(h: Array, part_senders: Array, part_receivers: Array,
         msgs = h_full[snd[0]] * wgt[0][:, None]
         return jax.ops.segment_sum(msgs, rcv[0], num_segments=n_local)
 
-    return jax.shard_map(
+    return shard_map(
         local, mesh=mesh,
         in_specs=(P(ax, None), P(ax, None), P(ax, None), P(ax, None)),
         out_specs=P(ax, None),
@@ -192,7 +194,7 @@ def ring_spmm(h: Array, part_senders: Array, part_receivers: Array,
         _, acc = jax.lax.fori_loop(0, n_shards, hop, (h_loc, acc0))
         return acc
 
-    return jax.shard_map(
+    return shard_map(
         local, mesh=mesh,
         in_specs=(P(ax, None), P(ax, None, None), P(ax, None, None),
                   P(ax, None, None)),

@@ -32,6 +32,8 @@ from typing import Optional
 import jax
 import jax.numpy as jnp
 
+from ..compat import axis_size
+
 Array = jax.Array
 
 
@@ -129,7 +131,7 @@ def moe_ffn_ep(params: dict, x: Array, cfg: MoEConfig, *, axis_name: str):
     (E_loc, d, f).  Two all_to_all ops move capacity buckets to/from expert
     owners.
     """
-    ep = jax.lax.axis_size(axis_name)
+    ep = axis_size(axis_name)
     E, E_loc = cfg.n_experts, cfg.n_experts // ep
     T, d = x.shape
     C = _capacity(T, cfg)  # per-expert capacity contributed by this sender

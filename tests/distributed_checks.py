@@ -90,8 +90,7 @@ def check_ring_spmm():
     h = rng.standard_normal((N, F)).astype(np.float32)
     ref = np.zeros((N, F), np.float32)
     np.add.at(ref, rcv, h[snd] * wgt[:, None])
-    mesh = jax.make_mesh((8,), ("x",),
-                         axis_types=(jax.sharding.AxisType.Auto,))
+    mesh = make_test_mesh((8,), ("x",))
     rp = partition_edges_ring(snd, rcv, wgt, N, 8)
     gp = partition_edges_gather(snd, rcv, wgt, N, 8)
     hj = jnp.asarray(h)
@@ -112,8 +111,7 @@ def check_ring_spmm():
 
 
 def check_gpipe():
-    mesh = jax.make_mesh((4,), ("pipe",),
-                         axis_types=(jax.sharding.AxisType.Auto,))
+    mesh = make_test_mesh((4,), ("pipe",))
     rng = np.random.default_rng(0)
     S, M, B, D = 4, 6, 3, 8
     ws = jnp.asarray(rng.standard_normal((S, D, D)) / np.sqrt(D), jnp.float32)
@@ -159,8 +157,7 @@ def check_dlrm_vocab_parallel():
 
 def check_analytical_vs_hlo():
     """The validation loop: analytical CommModels vs compiled collectives."""
-    mesh = jax.make_mesh((8,), ("data",),
-                         axis_types=(jax.sharding.AxisType.Auto,))
+    mesh = make_test_mesh((8,), ("data",))
     # --- pure DP grad all-reduce over 8 devices, exact prediction.
     D, F = 128, 64
     w = jnp.zeros((D, F), jnp.float32)
