@@ -6,7 +6,10 @@ present).  Use ``--figure figN`` / ``--skip-roofline`` to subset, and
 ``--json [PATH]`` to additionally emit a machine-readable timing summary
 (default ``BENCH_sweep.json``) covering fig3-fig7 plus the all-accelerator
 and full-graph composition sweeps — future PRs diff this file for the
-sweep engine's perf trajectory.
+sweep engine's perf trajectory.  The JSON also carries a ``conformance``
+block (one small measured-vs-modeled operating point, DESIGN.md §10);
+``--skip-conformance`` drops it, and ``python -m benchmarks.conformance``
+runs the full sweep.
 """
 
 from __future__ import annotations
@@ -37,6 +40,8 @@ def main() -> None:
                     help="only this benchmark (fig3..fig7, sweep_all, "
                          "cora_end_to_end)")
     ap.add_argument("--skip-roofline", action="store_true")
+    ap.add_argument("--skip-conformance", action="store_true",
+                    help="omit the conformance summary block from --json")
     ap.add_argument("--json", nargs="?", const="BENCH_sweep.json", default=None,
                     metavar="PATH",
                     help="also write a timing summary JSON (default "
@@ -61,8 +66,16 @@ def main() -> None:
             entry["n_rows"] += 1
 
     if args.json is not None:
+        payload = {"benchmarks": summary}
+        if not args.skip_conformance:
+            from repro.core.conformance import (OperatingPoint,
+                                                run_conformance,
+                                                summarize_records)
+            records = run_conformance(
+                points=(OperatingPoint(256, 16, 8, 128, 128),))
+            payload["conformance"] = summarize_records(records)
         with open(args.json, "w") as f:
-            json.dump({"benchmarks": summary}, f, indent=2, sort_keys=True)
+            json.dump(payload, f, indent=2, sort_keys=True)
             f.write("\n")
         print(f"# wrote {args.json} ({len(summary)} benchmarks)")
 

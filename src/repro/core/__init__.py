@@ -17,12 +17,18 @@ Public surface:
   (three-term roofline + per-strategy analytical collective models).
 * :mod:`repro.core.validation` — analytical-vs-compiled-HLO validation and
   seed golden totals for the registry-evaluated models.
+* :mod:`repro.core.conformance` — measured-vs-modeled conformance: pins
+  every dataflow with a runnable kernel analogue to byte measurements of
+  the compiled Pallas/XLA programs (DESIGN.md §10).
 """
 
 from . import registry
 from .awb_gcn import AWBGCNModel, AWB_GCN_SPEC
 from .compose import (FullGraphParams, MultiLayerModel, RESIDENCY_POLICIES,
                       TiledGraphModel)
+from .conformance import (ConformanceRecord, OperatingPoint,
+                          default_operating_points, run_conformance,
+                          summarize_records)
 from .dataflow import DataflowSpec, MovementSpec, SpecModel, MOVEMENT_ROLES
 from .engn import ENGN_SPEC, EnGNModel
 from .hygcn import HYGCN_SPEC, HyGCNModel
@@ -32,6 +38,7 @@ from .notation import (AWBGCNHardwareParams, EnGNHardwareParams,
                        PAPER_DEFAULT_HYGCN, TiledSpMMHardwareParams,
                        paper_default_graph)
 from .spmm_tiled import SPMM_TILED_SPEC, TiledSpMMModel
+from .spmm_unfused import SPMM_UNFUSED_SPEC, UnfusedSpMMModel
 from .terms import (AcceleratorModel, L1_CLASSES, L2_CLASSES, CACHE_CLASSES,
                     ModelOutput, MovementTerm, tabulate)
 
@@ -46,11 +53,19 @@ __all__ = [
     "EnGNModel",
     "HyGCNModel",
     "TiledSpMMModel",
+    "UnfusedSpMMModel",
     "AWBGCNModel",
     "ENGN_SPEC",
     "HYGCN_SPEC",
     "SPMM_TILED_SPEC",
+    "SPMM_UNFUSED_SPEC",
     "AWB_GCN_SPEC",
+    # conformance
+    "ConformanceRecord",
+    "OperatingPoint",
+    "default_operating_points",
+    "run_conformance",
+    "summarize_records",
     # composition
     "MultiLayerModel",
     "TiledGraphModel",

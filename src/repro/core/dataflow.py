@@ -77,12 +77,21 @@ class DataflowSpec:
     ``hw_factory`` builds the accelerator's default hardware parameters
     (Table II right column, or this repo's extensions); passing an explicit
     ``hw`` to :meth:`evaluate` overrides it wholesale.
+
+    ``runnable`` is the conformance hook (DESIGN.md §10): a zero-arg factory
+    returning a kernel-analogue object (see :mod:`repro.core.conformance`)
+    when the dataflow has a compilable Pallas/XLA counterpart whose measured
+    HBM bytes can be pinned against these closed forms.  ``None`` (the
+    default) means the dataflow is analytical-only — the paper's situation
+    for EnGN/HyGCN, whose simulators are closed-source.  The factory is
+    called lazily so specs stay importable without jax.
     """
 
     name: str
     movements: tuple[MovementSpec, ...]
     hw_factory: Callable[[], object]
     description: str = ""
+    runnable: Callable[[], object] | None = None
 
     def __post_init__(self) -> None:
         names = [m.name for m in self.movements]
@@ -112,6 +121,17 @@ class DataflowSpec:
         if role not in MOVEMENT_ROLES:
             raise ValueError(f"unknown role {role!r}")
         return tuple(m for m in self.movements if m.role == role)
+
+    @property
+    def has_runnable(self) -> bool:
+        return self.runnable is not None
+
+    def runnable_analogue(self):
+        """Instantiate the registered kernel analogue (conformance hook)."""
+        if self.runnable is None:
+            raise ValueError(f"dataflow {self.name!r} declares no runnable "
+                             "kernel analogue (runnable=None)")
+        return self.runnable()
 
 
 class SpecModel(AcceleratorModel):

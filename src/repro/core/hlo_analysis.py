@@ -21,7 +21,7 @@ from dataclasses import dataclass, field
 from typing import Iterable, Mapping
 
 __all__ = ["CollectiveOp", "CollectiveStats", "parse_collectives",
-           "DTYPE_BYTES"]
+           "entry_boundary_bytes", "DTYPE_BYTES"]
 
 DTYPE_BYTES: dict[str, float] = {
     "pred": 1, "s4": 0.5, "u4": 0.5, "s8": 1, "u8": 1, "s16": 2, "u16": 2,
@@ -135,6 +135,39 @@ class CollectiveStats:
             "by_kind": self.by_kind(),
             "counts": self.counts(),
         }
+
+
+# The result capture is greedy and anchored on the line-final body brace:
+# layout-annotated signatures ("-> (f32[128]{0}, f32[64]{0}) {", common in
+# TPU dumps) contain shape-layout braces the lazy form would stop at.
+_ENTRY_RE = re.compile(
+    r"^ENTRY\s+\S+\s*\((?P<params>.*)\)\s*->\s*(?P<result>.+?)\s*\{\s*$",
+    re.MULTILINE)
+
+
+def entry_boundary_bytes(hlo_text: str) -> dict[str, float]:
+    """Exact bytes crossing the executable boundary of an HLO module.
+
+    Every entry parameter must be read from memory at least once and every
+    result written once, so the ENTRY signature is a measurement floor no
+    schedule can beat — and, for programs whose operands stream blockwise
+    exactly once per distinct block, the precise HBM footprint.  The
+    conformance subsystem (DESIGN.md §10) pins kernel-boundary traffic —
+    notably the inter-phase buffer materialized between the unfused
+    aggregate/combine pair — on these numbers.
+
+    Returns ``{"param_bytes", "result_bytes", "total_bytes"}``.
+    """
+    m = _ENTRY_RE.search(hlo_text)
+    if not m:
+        raise ValueError("no ENTRY computation signature found in HLO text")
+    param_bytes = _shape_bytes(m.group("params"))
+    result_bytes = _shape_bytes(m.group("result"))
+    return {
+        "param_bytes": param_bytes,
+        "result_bytes": result_bytes,
+        "total_bytes": param_bytes + result_bytes,
+    }
 
 
 def parse_collectives(hlo_text: str) -> CollectiveStats:

@@ -8,8 +8,12 @@ now: write a :class:`~repro.core.dataflow.DataflowSpec` and call
 :func:`register` — no sweep/benchmark/example code changes.
 
 Built-in entries: ``engn`` and ``hygcn`` (Tables III/IV of the paper),
-``spmm_tiled`` (the repo's fused block-dense Pallas-kernel analogue), and
+``spmm_tiled`` (the repo's fused block-dense Pallas-kernel analogue),
+``spmm_unfused`` (the two-pass HyGCN inter-phase analogue), and
 ``awb_gcn`` (column-balanced dataflow, MICRO 2020) — see DESIGN.md §4/§7.
+The two spmm dataflows declare runnable kernel analogues
+(``DataflowSpec.runnable``), which the conformance subsystem
+(:mod:`repro.core.conformance`, DESIGN.md §10) pins to measured bytes.
 """
 
 from __future__ import annotations
@@ -19,9 +23,11 @@ from .dataflow import DataflowSpec, SpecModel
 from .engn import ENGN_SPEC
 from .hygcn import HYGCN_SPEC
 from .spmm_tiled import SPMM_TILED_SPEC
+from .spmm_unfused import SPMM_UNFUSED_SPEC
 from .terms import ModelOutput
 
-__all__ = ["register", "get", "names", "specs", "model", "evaluate"]
+__all__ = ["register", "get", "names", "specs", "model", "evaluate",
+           "runnable_names"]
 
 _REGISTRY: dict[str, DataflowSpec] = {}
 
@@ -62,6 +68,12 @@ def evaluate(name: str, graph, hw=None) -> ModelOutput:
     return get(name).evaluate(graph, hw)
 
 
-for _spec in (ENGN_SPEC, HYGCN_SPEC, SPMM_TILED_SPEC, AWB_GCN_SPEC):
+def runnable_names() -> tuple[str, ...]:
+    """Dataflows declaring a compilable kernel analogue (conformance)."""
+    return tuple(name for name, spec in _REGISTRY.items() if spec.has_runnable)
+
+
+for _spec in (ENGN_SPEC, HYGCN_SPEC, SPMM_TILED_SPEC, SPMM_UNFUSED_SPEC,
+              AWB_GCN_SPEC):
     register(_spec)
 del _spec

@@ -49,23 +49,31 @@ def loadadjblocks(g: GraphTileParams, hw: TiledSpMMHardwareParams):
 
 
 def loadvertblocks(g: GraphTileParams, hw: TiledSpMMHardwareParams):
-    """Stream each (Bk x N) feature block once per destination block row."""
+    """Stream a (Bk x N) feature block whenever its block index changes.
+
+    The Pallas pipeline elides the DMA when consecutive grid steps map to
+    the same block (DESIGN.md §10): with the source-block index innermost,
+    X block j is re-fetched on every step — ``nbn * nbk`` fetches — except
+    in the single-source-block schedule (nbk == 1), where the index is
+    constant and X is fetched exactly once.
+    """
     N, _, _, _, _ = g.astuple_f64()
     s, B, Bk = _f64(hw.sigma), _f64(hw.B), _f64(hw.Bk)
     nbn, nbk = _blocks(g, hw)
+    n_fetch = np.where(nbk > 1.0, nbn * nbk, 1.0)
     block_bits = Bk * N * s
-    iters = nbn * nbk * ceil(block_bits / B)
-    bits = nbn * nbk * block_bits
+    iters = n_fetch * ceil(block_bits / B)
+    bits = n_fetch * block_bits
     return bits, iters
 
 
 def loadweights(g: GraphTileParams, hw: TiledSpMMHardwareParams):
-    """Load the (N x T) combine weight once per destination block row."""
+    """Load the (N x T) combine weight once: its block index is constant
+    over the whole grid, so the weight stays resident in VMEM."""
     N, T, _, _, _ = g.astuple_f64()
     s, B = _f64(hw.sigma), _f64(hw.B)
-    nbn, _ = _blocks(g, hw)
-    iters = nbn * ceil(N * T * s / B)
-    bits = nbn * N * T * s
+    iters = ceil(N * T * s / B)
+    bits = N * T * s
     return bits, iters
 
 
@@ -98,6 +106,12 @@ def writeout(g: GraphTileParams, hw: TiledSpMMHardwareParams):
     return bits, iters
 
 
+def _runnable_analogue():
+    """Conformance hook (DESIGN.md §10): the fused Pallas kernel analogue."""
+    from .conformance import FusedSpMMAnalogue
+    return FusedSpMMAnalogue()
+
+
 SPMM_TILED_SPEC = DataflowSpec(
     name="spmm_tiled",
     movements=(
@@ -111,6 +125,7 @@ SPMM_TILED_SPEC = DataflowSpec(
     hw_factory=TiledSpMMHardwareParams,
     description="Generic fused block-dense SpMM (the repo's Pallas-kernel "
                 "analogue): no inter-phase buffer, dense topology blocks.",
+    runnable=_runnable_analogue,
 )
 
 

@@ -1,0 +1,87 @@
+"""Unfused two-pass block-dense SpMM — the HyGCN inter-phase analogue.
+
+HyGCN's defining cost (Table IV, Fig. 4) is the inter-phase buffer between
+its aggregation and combination engines: aggregated features are written
+off-array (``writeinterphase`` = K*N*sigma bits) and read back by the
+combination engine (``readinterphase``).  The fused kernel analogue
+(:mod:`repro.core.spmm_tiled` / :mod:`repro.kernels.edge_aggregate`)
+eliminates exactly those terms by keeping the aggregate in a VMEM
+accumulator.
+
+This spec models the *unfused* TPU pipeline — two separately-compiled
+Pallas kernels (:mod:`repro.kernels.edge_aggregate_unfused`): pass 1
+aggregates ``Y_agg = A @ X`` and writes the (K x N) aggregate to HBM;
+pass 2 reads it back and combines ``Y = Y_agg @ W``.  Every other movement
+level is identical to ``spmm_tiled``, so the analytical fused-minus-unfused
+delta is precisely the two inter-phase terms — which the conformance
+subsystem (:mod:`repro.core.conformance`) pins against measured bytes of
+the compiled programs.
+
+On the paper's ``P_s`` (edges surviving window sliding): block-dense
+aggregation materializes each destination vertex's aggregate exactly once,
+so the combination pass re-reads K dense rows rather than P_s edge-wise
+gathers — the analogue realizes the paper's ``P_s*N*sigma`` read term at
+``P_s = K`` (DESIGN.md §10).
+"""
+
+from __future__ import annotations
+
+from .dataflow import DataflowSpec, MovementSpec, SpecModel
+from .notation import GraphTileParams, TiledSpMMHardwareParams
+from .spmm_tiled import (accumulate, combinefuse, loadadjblocks,
+                         loadvertblocks, loadweights, writeout, _blocks, _f64)
+from .terms import ceil
+
+__all__ = ["UnfusedSpMMModel", "SPMM_UNFUSED_SPEC"]
+
+
+def writeinterphase(g: GraphTileParams, hw: TiledSpMMHardwareParams):
+    """Pass 1 spills the padded (ceil(K/Bn)*Bn x N) aggregate to L2."""
+    N, _, _, _, _ = g.astuple_f64()
+    s, B, Bn = _f64(hw.sigma), _f64(hw.B), _f64(hw.Bn)
+    nbn, _ = _blocks(g, hw)
+    tile_bits = Bn * N * s
+    iters = nbn * ceil(tile_bits / B)
+    bits = nbn * tile_bits
+    return bits, iters
+
+
+def readinterphase(g: GraphTileParams, hw: TiledSpMMHardwareParams):
+    """Pass 2 fetches each aggregate tile back — the P_s = K dense-row
+    realization of the paper's ``P_s*N*sigma`` read term."""
+    return writeinterphase(g, hw)
+
+
+def _runnable_analogue():
+    """Conformance hook (DESIGN.md §10): the two-pass Pallas kernel pair."""
+    from .conformance import UnfusedSpMMAnalogue
+    return UnfusedSpMMAnalogue()
+
+
+SPMM_UNFUSED_SPEC = DataflowSpec(
+    name="spmm_unfused",
+    movements=(
+        MovementSpec("loadadjblocks", "L2-L1", loadadjblocks, role="edges"),
+        MovementSpec("loadvertblocks", "L2-L1", loadvertblocks, role="vertex_in"),
+        MovementSpec("accumulate", "L1-L1", accumulate, role="compute"),
+        MovementSpec("writeinterphase", "L1-L2", writeinterphase, role="interphase"),
+        MovementSpec("readinterphase", "L2-L1", readinterphase, role="interphase"),
+        MovementSpec("loadweights", "L2-L1", loadweights, role="weights"),
+        # same on-array combine as the fused kernel (one aggregate-tile read
+        # + output write per dst block) — shared so the fused-minus-unfused
+        # delta stays exactly the two interphase terms.
+        MovementSpec("combine", "L1-L1", combinefuse, role="compute"),
+        MovementSpec("writeout", "L1-L2", writeout, role="vertex_out"),
+    ),
+    hw_factory=TiledSpMMHardwareParams,
+    description="Unfused two-pass block-dense SpMM (HyGCN inter-phase "
+                "analogue): the aggregate round-trips through HBM between "
+                "separately-compiled aggregation and combination kernels.",
+    runnable=_runnable_analogue,
+)
+
+
+class UnfusedSpMMModel(SpecModel):
+    """Class-API adapter for the unfused two-pass baseline."""
+
+    spec = SPMM_UNFUSED_SPEC

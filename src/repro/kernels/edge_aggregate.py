@@ -15,11 +15,19 @@ TPU adaptation (DESIGN.md §3):
   in a VMEM accumulator and is immediately multiplied by the combine weight
   W — the inter-phase buffer collapses into registers.  The HBM traffic
   eliminated per (K-node, N-feature) tile is exactly the paper's
-  ``K*N*sigma`` write + ``P_s*N*sigma`` read terms.
+  ``K*N*sigma`` write + ``P_s*N*sigma`` read terms (the unfused two-pass
+  baseline in :mod:`repro.kernels.edge_aggregate_unfused` pays them).
 
 Grid: (num dst node blocks, num src node blocks).  For each dst block i the
 kernel accumulates sum_j A[i,j] @ X[j] in VMEM and, on the last j, applies
 the (F x T) combine weight and writes the (BN x T) output tile once.
+
+Byte accounting (DESIGN.md §10): :func:`fused_grid_spec` is the single
+source of the kernel's grid + block geometry — ``pallas_call`` consumes it
+and :func:`fused_block_streams` re-exports the same index maps as
+movement-level-named stream descriptors, so the conformance subsystem
+(:mod:`repro.core.conformance`) measures the schedule the kernel actually
+launches, not a transcription of it.
 
 ``emit(..., interpret=True)`` validates on CPU; ops.py wraps it jitted.
 """
@@ -56,6 +64,52 @@ def _kernel(a_ref, x_ref, w_ref, out_ref, acc_ref, *, n_src_blocks: int):
                                ).astype(out_ref.dtype)
 
 
+def fused_grid_spec(n: int, f: int, t: int, block_n: int, block_k: int):
+    """Grid + (block_shape, index_map) geometry of the fused kernel.
+
+    Returns ``(grid, in_geoms, out_geom)`` with one ``(shape, index_map)``
+    pair per operand in call order (A, X, W) and one for the output.  The
+    same pairs construct the ``pallas_call`` BlockSpecs and the conformance
+    stream descriptors — keep them in sync by construction.
+    """
+    assert n % block_n == 0 and n % block_k == 0, (n, block_n, block_k)
+    grid = (n // block_n, n // block_k)
+    in_geoms = (
+        ((block_n, block_k), lambda i, j: (i, j)),   # A tile
+        ((block_k, f), lambda i, j: (j, 0)),         # X tile
+        ((f, t), lambda i, j: (0, 0)),               # W (resident)
+    )
+    out_geom = ((block_n, t), lambda i, j: (i, 0))
+    return grid, in_geoms, out_geom
+
+
+def fused_block_streams(n: int, f: int, t: int, *,
+                        block_n: int = DEFAULT_BLOCK_N,
+                        block_k: int = DEFAULT_BLOCK_K,
+                        elem_bytes: float = 4.0) -> dict:
+    """Movement-level-named HBM stream descriptors of the fused kernel.
+
+    Keys match the ``spmm_tiled`` dataflow's off-chip movement levels; each
+    value carries the block shape, the *actual* kernel index map, the
+    element width, and the transfer direction — everything the conformance
+    schedule trace needs (DESIGN.md §10).
+    """
+    grid, (a_g, x_g, w_g), out_g = fused_grid_spec(n, f, t, block_n, block_k)
+    return {
+        "grid": grid,
+        "streams": {
+            "loadadjblocks": {"block_shape": a_g[0], "index_map": a_g[1],
+                              "elem_bytes": elem_bytes, "kind": "read"},
+            "loadvertblocks": {"block_shape": x_g[0], "index_map": x_g[1],
+                               "elem_bytes": elem_bytes, "kind": "read"},
+            "loadweights": {"block_shape": w_g[0], "index_map": w_g[1],
+                            "elem_bytes": elem_bytes, "kind": "read"},
+            "writeout": {"block_shape": out_g[0], "index_map": out_g[1],
+                         "elem_bytes": elem_bytes, "kind": "write"},
+        },
+    }
+
+
 def fused_aggregate_combine(adjacency: jax.Array, x: jax.Array, w: jax.Array,
                             *, block_n: int = DEFAULT_BLOCK_N,
                             block_k: int = DEFAULT_BLOCK_K,
@@ -71,18 +125,13 @@ def fused_aggregate_combine(adjacency: jax.Array, x: jax.Array, w: jax.Array,
     assert w.shape[0] == f
     block_n = min(block_n, n)
     block_k = min(block_k, n)
-    assert n % block_n == 0 and n % block_k == 0, (n, block_n, block_k)
-    grid = (n // block_n, n // block_k)
+    grid, in_geoms, out_geom = fused_grid_spec(n, f, t, block_n, block_k)
 
     return pl.pallas_call(
         functools.partial(_kernel, n_src_blocks=grid[1]),
         grid=grid,
-        in_specs=[
-            pl.BlockSpec((block_n, block_k), lambda i, j: (i, j)),   # A tile
-            pl.BlockSpec((block_k, f), lambda i, j: (j, 0)),         # X tile
-            pl.BlockSpec((f, t), lambda i, j: (0, 0)),               # W
-        ],
-        out_specs=pl.BlockSpec((block_n, t), lambda i, j: (i, 0)),
+        in_specs=[pl.BlockSpec(shape, imap) for shape, imap in in_geoms],
+        out_specs=pl.BlockSpec(*out_geom),
         out_shape=jax.ShapeDtypeStruct((n, t), x.dtype),
         scratch_shapes=[pltpu.VMEM((block_n, f), jnp.float32)],
         interpret=interpret,

@@ -16,6 +16,7 @@ import jax
 import jax.numpy as jnp
 
 from .edge_aggregate import fused_aggregate_combine
+from .edge_aggregate_unfused import aggregate_pass, combine_pass
 from .embedding_bag import embedding_bag as _embedding_bag
 from .flash_attention import flash_attention_bhsd
 
@@ -26,6 +27,26 @@ def gnn_aggregate_combine(adjacency: jax.Array, x: jax.Array, w: jax.Array,
                           interpret: bool = True) -> jax.Array:
     return fused_aggregate_combine(adjacency, x, w, block_n=block_n,
                                    block_k=block_k, interpret=interpret)
+
+
+@partial(jax.jit, static_argnames=("block_n", "block_k", "interpret"))
+def gnn_aggregate(adjacency: jax.Array, x: jax.Array, *,
+                  block_n: int = 256, block_k: int = 256,
+                  interpret: bool = True) -> jax.Array:
+    """Unfused pass 1: Y_agg = A @ X (the aggregate materializes in HBM)."""
+    return aggregate_pass(adjacency, x, block_n=block_n, block_k=block_k,
+                          interpret=interpret)
+
+
+@partial(jax.jit, static_argnames=("block_n", "interpret"))
+def gnn_combine(y_agg: jax.Array, w: jax.Array, *, block_n: int = 256,
+                interpret: bool = True) -> jax.Array:
+    """Unfused pass 2: Y = Y_agg @ W (reads the inter-phase buffer back).
+
+    Jitted separately from :func:`gnn_aggregate` on purpose — the pair is
+    the HyGCN inter-phase analogue, and fusing the passes into one program
+    would let XLA elide exactly the traffic being modelled."""
+    return combine_pass(y_agg, w, block_n=block_n, interpret=interpret)
 
 
 @partial(jax.jit, static_argnames=("causal", "window", "softcap",

@@ -1,0 +1,158 @@
+"""parse_collectives / entry_boundary_bytes edge cases on hand-written HLO.
+
+No compilation anywhere: each fixture is the post-SPMD optimized-HLO text
+shape the parser claims to handle (tuple-shaped variadic collectives,
+async -start/-done dedup, iota-form replica_groups, unknown dtypes), so
+regressions localize to the regexes rather than to jax version drift.
+"""
+
+import pytest
+
+from repro.core.hlo_analysis import (CollectiveOp, DTYPE_BYTES,
+                                     entry_boundary_bytes, parse_collectives)
+
+# ---------------------------------------------------------------------------
+# Tuple-shaped (variadic) collectives sum their components.
+# ---------------------------------------------------------------------------
+VARIADIC_HLO = """\
+HloModule variadic
+ENTRY %main (p0: f32[128], p1: bf16[64,8]) -> (f32[128], bf16[64,8]) {
+  %p0 = f32[128]{0} parameter(0)
+  %p1 = bf16[64,8]{1,0} parameter(1)
+  %ar = (f32[128]{0}, bf16[64,8]{1,0}) all-reduce(%p0, %p1), replica_groups={{0,1,2,3}}, to_apply=%add
+  ROOT %t = (f32[128]{0}, bf16[64,8]{1,0}) tuple(%ar, %ar)
+}
+"""
+
+
+def test_variadic_tuple_collective_sums_components():
+    stats = parse_collectives(VARIADIC_HLO)
+    assert len(stats.ops) == 1
+    op = stats.ops[0]
+    assert op.kind == "all-reduce"
+    assert op.group_size == 4
+    assert op.result_bytes == 128 * 4 + 64 * 8 * 2
+    # all-reduce wire algebra: 2 * s * (g-1)/g
+    assert op.wire_bytes_per_chip == pytest.approx(2 * op.result_bytes * 3 / 4)
+
+
+# ---------------------------------------------------------------------------
+# Async pairs: -start counted once, -done skipped.
+# ---------------------------------------------------------------------------
+ASYNC_HLO = """\
+HloModule async_pair
+ENTRY %main (p0: bf16[2,1,128]) -> bf16[2,16,128] {
+  %p0 = bf16[2,1,128]{2,1,0} parameter(0)
+  %ag-start = bf16[2,16,128]{2,1,0} all-gather-start(%p0), replica_groups={{0,1,2,3,4,5,6,7,8,9,10,11,12,13,14,15}}, dimensions={1}
+  ROOT %ag-done = bf16[2,16,128]{2,1,0} all-gather-done(%ag-start)
+}
+"""
+
+
+def test_async_start_done_counted_once():
+    stats = parse_collectives(ASYNC_HLO)
+    assert stats.counts() == {"all-gather": 1}
+    op = stats.ops[0]
+    assert op.group_size == 16
+    assert op.result_bytes == 2 * 16 * 128 * 2
+    assert stats.total_wire_bytes_per_chip == pytest.approx(
+        op.result_bytes * 15 / 16)
+
+
+# ---------------------------------------------------------------------------
+# Iota-form replica_groups: [num_groups,group_size]<=...
+# ---------------------------------------------------------------------------
+IOTA_HLO = """\
+HloModule iota_groups
+ENTRY %main (p0: f32[64,256]) -> f32[64,32] {
+  %p0 = f32[64,256]{1,0} parameter(0)
+  ROOT %rs = f32[64,32]{1,0} reduce-scatter(%p0), replica_groups=[4,8]<=[32], dimensions={1}, to_apply=%add
+}
+"""
+
+
+def test_iota_replica_groups_group_size():
+    stats = parse_collectives(IOTA_HLO)
+    op = stats.ops[0]
+    assert op.kind == "reduce-scatter"
+    assert op.group_size == 8          # [num_groups, group_size] iota form
+    # reduce-scatter wire bytes: result * (g - 1)
+    assert op.wire_bytes_per_chip == pytest.approx(64 * 32 * 4 * 7)
+
+
+# ---------------------------------------------------------------------------
+# Unknown dtypes are silently skipped (token/opaque-typed collectives).
+# ---------------------------------------------------------------------------
+UNKNOWN_DTYPE_HLO = """\
+HloModule unknown_dtype
+ENTRY %main (p0: f32[16]) -> f32[16] {
+  %p0 = f32[16]{0} parameter(0)
+  %cp = token[] collective-permute(%t0), source_target_pairs={{0,1},{1,0}}
+  %weird = zz9[8,8]{1,0} all-reduce(%q), replica_groups={{0,1}}
+  ROOT %r = f32[16]{0} add(%p0, %p0)
+}
+"""
+
+
+def test_unknown_dtypes_silently_skipped():
+    stats = parse_collectives(UNKNOWN_DTYPE_HLO)
+    assert stats.ops == []
+    assert stats.total_wire_bytes_per_chip == 0.0
+    assert "zz9" not in DTYPE_BYTES
+
+
+def test_collective_permute_counts_full_payload():
+    hlo = """\
+  %cp = f32[4,8]{1,0} collective-permute(%p), source_target_pairs={{0,1},{1,2},{2,0}}
+"""
+    stats = parse_collectives(hlo)
+    op = stats.ops[0]
+    assert op.kind == "collective-permute"
+    assert op.wire_bytes_per_chip == 4 * 8 * 4   # payload crosses the wire once
+
+
+def test_empty_and_collective_free_text():
+    assert parse_collectives("").ops == []
+    assert parse_collectives("ENTRY %main () -> f32[] {}").ops == []
+
+
+# ---------------------------------------------------------------------------
+# entry_boundary_bytes (the conformance boundary measurement).
+# ---------------------------------------------------------------------------
+def test_entry_boundary_bytes_params_and_result():
+    b = entry_boundary_bytes(VARIADIC_HLO)
+    assert b["param_bytes"] == 128 * 4 + 64 * 8 * 2
+    assert b["result_bytes"] == 128 * 4 + 64 * 8 * 2   # tuple result summed
+    assert b["total_bytes"] == b["param_bytes"] + b["result_bytes"]
+
+
+def test_entry_boundary_bytes_layout_annotated_tuple_result():
+    """TPU-style dumps annotate layouts in the ENTRY signature; the result
+    capture must reach the body brace, not stop at the first layout brace."""
+    hlo = ("HloModule m\n"
+           "ENTRY %main.7 (Arg_0.1: f32[128], Arg_1.2: f32[64,8]) "
+           "-> (f32[128]{0}, f32[64,8]{1,0}) {\n"
+           "  ROOT %t = tuple()\n}\n")
+    b = entry_boundary_bytes(hlo)
+    assert b["param_bytes"] == 128 * 4 + 64 * 8 * 4
+    assert b["result_bytes"] == 128 * 4 + 64 * 8 * 4
+    assert b["total_bytes"] == b["param_bytes"] + b["result_bytes"]
+
+
+def test_entry_boundary_bytes_requires_entry():
+    with pytest.raises(ValueError, match="ENTRY"):
+        entry_boundary_bytes("HloModule no_entry\n%foo = f32[2]{0} add(...)")
+
+
+def test_wire_algebra_table():
+    """The per-kind ring-schedule algebra, pinned (tpu_model §)."""
+    cases = {
+        "all-gather": 1024 * 3 / 4,
+        "all-reduce": 2 * 1024 * 3 / 4,
+        "reduce-scatter": 1024 * 3,
+        "all-to-all": 1024 * 3 / 4,
+        "collective-permute": 1024,
+    }
+    for kind, expect in cases.items():
+        op = CollectiveOp(kind, 1024.0, 4, 0)
+        assert op.wire_bytes_per_chip == pytest.approx(expect), kind

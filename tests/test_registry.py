@@ -67,13 +67,20 @@ def test_registry_bit_identical_to_seed_terms(name):
     assert got == SEED_GOLDEN_TERMS[name]
 
 
-@pytest.mark.parametrize("name", ["engn", "hygcn"])
+@pytest.mark.parametrize("name", sorted(SEC4_GOLDEN_TOTALS))
 def test_registry_matches_validation_golden(name):
+    """All registered dataflows are regression-locked at Sec. IV defaults:
+    engn/hygcn to the seed captures, the extension dataflows to their
+    conformance-validated closed forms (DESIGN.md §10)."""
     total, iters = SEC4_GOLDEN_TOTALS[name]
     out = registry.evaluate(name, paper_default_graph())
     assert float(out.total_bits()) == total
     assert float(out.total_iterations()) == iters
     assert validate_dataflow_golden(name).ratio == 1.0
+
+
+def test_golden_totals_cover_every_registered_dataflow():
+    assert set(SEC4_GOLDEN_TOTALS) == set(registry.names())
 
 
 @pytest.mark.parametrize("fig,fn", [
@@ -95,8 +102,8 @@ def test_sweep_grids_bit_identical_to_seed(fig, fn):
 # ---------------------------------------------------------------------------
 # Registry surface.
 # ---------------------------------------------------------------------------
-def test_registry_has_all_four_accelerators():
-    for name in ("engn", "hygcn", "spmm_tiled", "awb_gcn"):
+def test_registry_has_all_builtin_accelerators():
+    for name in ("engn", "hygcn", "spmm_tiled", "spmm_unfused", "awb_gcn"):
         spec = registry.get(name)
         assert isinstance(spec, DataflowSpec)
         assert spec.name == name
@@ -145,7 +152,7 @@ def test_spmm_tiled_block_sizes_match_kernel():
 # ---------------------------------------------------------------------------
 # Composition layer: multi-layer.
 # ---------------------------------------------------------------------------
-@pytest.mark.parametrize("name", ["engn", "hygcn", "spmm_tiled", "awb_gcn"])
+@pytest.mark.parametrize("name", ["engn", "hygcn", "spmm_tiled", "spmm_unfused", "awb_gcn"])
 @pytest.mark.parametrize("n_layers", [1, 2, 4])
 def test_multilayer_spill_equals_L_times_single_layer(name, n_layers):
     """Property: spill residency + equal widths == L x the single layer."""
@@ -161,7 +168,7 @@ def test_multilayer_spill_equals_L_times_single_layer(name, n_layers):
         assert float(out[t.name].data_bits) == n_layers * float(t.data_bits)
 
 
-@pytest.mark.parametrize("name", ["engn", "hygcn", "spmm_tiled", "awb_gcn"])
+@pytest.mark.parametrize("name", ["engn", "hygcn", "spmm_tiled", "spmm_unfused", "awb_gcn"])
 def test_multilayer_resident_saves_offchip(name):
     graph = paper_default_graph().replace(T=30)
     widths = [30, 30, 30]
