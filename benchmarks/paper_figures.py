@@ -1,6 +1,11 @@
 """One benchmark per paper artifact (Figs. 3-7) — each returns CSV rows and
 a wall-time per evaluation (the analytical models are vectorized closed
-forms, so the timing quantifies the sweep engine itself)."""
+forms, so the timing quantifies the sweep engine itself).
+
+Every benchmark here routes through the scenario front door
+(:mod:`repro.api`, DESIGN.md §11): the figures via the named templates
+behind the ``figN_*`` sweep functions, the composition and workload
+studies as explicit scenario batches handed to the batch planner."""
 
 from __future__ import annotations
 
@@ -8,8 +13,8 @@ import time
 
 import numpy as np
 
-from repro.core import (FullGraphParams, MultiLayerModel, TiledGraphModel,
-                        registry)
+from repro.api import evaluate_scenarios, template
+from repro.core import registry
 from repro.core.sweep import (fig3_engn_movement, fig4_hygcn_movement,
                               fig5_iterations_vs_bandwidth,
                               fig6_fitting_factor, fig7_systolic_reuse,
@@ -80,33 +85,45 @@ def sweep_all() -> list[dict]:
 
 def cora_end_to_end() -> list[dict]:
     """Full-graph composition: 2-layer GCN on Cora for every accelerator,
-    vectorized across a tile-capacity grid in a single call per dataflow."""
-    tile_caps = np.array([256, 512, 1024, 2048], dtype=np.float64)
-    cora = FullGraphParams(V=2708, E=10556, N=1433, T=7)
-
-    def run():
-        outs = {}
-        for name in registry.names():
-            model = TiledGraphModel(MultiLayerModel(name, [1433, 16, 7]),
-                                    tile_vertices=tile_caps)
-            outs[name] = model.evaluate(cora)
-        return outs
-
-    outs, us = _timed(run)
+    one scenario batch — the planner stacks the tile-capacity grid and
+    evaluates each dataflow in a single broadcast call."""
+    tb = template("cora_end_to_end")
+    res, us = _timed(evaluate_scenarios, tb.scenarios)
+    assert res.n_evaluations == len(registry.names())
     rows = []
-    for name, out in outs.items():
-        n_tiles = np.broadcast_to(out.meta["n_tiles"], tile_caps.shape)
-        total = np.broadcast_to(out.total_bits(), tile_caps.shape)
-        offchip = np.broadcast_to(out.offchip_bits(), tile_caps.shape)
-        halo = np.broadcast_to(out["haloreload"].data_bits, tile_caps.shape)
-        for i, cap in enumerate(tile_caps):
-            rows.append({
-                "figure": "cora_end_to_end", "accelerator": name,
-                "tile_vertices": float(cap), "n_tiles": float(n_tiles[i]),
-                "total_bits": float(total[i]), "offchip_bits": float(offchip[i]),
-                "halo_bits": float(halo[i]), "us_per_call": us,
-            })
+    for r in res.results:
+        s = r.scenario
+        rows.append({
+            "figure": "cora_end_to_end", "accelerator": s.dataflow,
+            "tile_vertices": s.composition.tile_vertices,
+            "n_tiles": r.n_tiles,
+            "total_bits": r.total_bits, "offchip_bits": r.offchip_bits,
+            "halo_bits": r.breakdown["haloreload"], "us_per_call": us,
+        })
     return rows
 
 
-ALL = (fig3, fig4, fig5, fig6, fig7, sweep_all, cora_end_to_end)
+def workloads() -> list[dict]:
+    """The configs' §5 tile-language bridges: every (workload shape x
+    dataflow) movement total as one declarative scenario batch."""
+    from repro.configs import workload_scenarios
+
+    archs = ("smollm-135m", "gemma2-2b", "equiformer-v2", "dlrm-mlperf")
+    scenarios = workload_scenarios(archs)
+    res, us = _timed(evaluate_scenarios, scenarios)
+    rows = []
+    for r in res.results:
+        rows.append({
+            "figure": "workload_scenarios",
+            "workload": r.scenario.workload,
+            "accelerator": r.scenario.dataflow,
+            "total_bits": r.total_bits,
+            "total_iterations": r.total_iterations,
+            "offchip_bits": r.offchip_bits,
+            "n_evaluations": res.n_evaluations,
+            "us_per_call": us,
+        })
+    return rows
+
+
+ALL = (fig3, fig4, fig5, fig6, fig7, sweep_all, cora_end_to_end, workloads)

@@ -2,14 +2,18 @@
 
 Prints one CSV per paper table/figure (name,us_per_call,derived columns)
 followed by the §Roofline table derived from the dry-run artifacts (if
-present).  Use ``--figure figN`` / ``--skip-roofline`` to subset, and
-``--json [PATH]`` to additionally emit a machine-readable timing summary
-(default ``BENCH_sweep.json``) covering fig3-fig7 plus the all-accelerator
-and full-graph composition sweeps — future PRs diff this file for the
-sweep engine's perf trajectory.  The JSON also carries a ``conformance``
-block (one small measured-vs-modeled operating point, DESIGN.md §10);
-``--skip-conformance`` drops it, and ``python -m benchmarks.conformance``
-runs the full sweep.
+present).  Every benchmark is a scenario batch through the ``repro.api``
+front door (DESIGN.md §11) — the figures via their named templates, the
+composition and workload studies as explicit batches; ``python -m
+repro.api`` replays any of them from JSON.  Use ``--figure figN`` (fig3..
+fig7, sweep_all, cora_end_to_end, workloads) / ``--skip-roofline`` to
+subset, and ``--json [PATH]`` to additionally emit a machine-readable
+timing summary (default ``BENCH_sweep.json``) covering fig3-fig7 plus the
+all-accelerator, full-graph composition, and workload-bridge sweeps —
+future PRs diff this file for the sweep engine's perf trajectory.  The
+JSON also carries a ``conformance`` block (one small measured-vs-modeled
+operating point, DESIGN.md §10); ``--skip-conformance`` drops it, and
+``python -m benchmarks.conformance`` runs the full sweep.
 """
 
 from __future__ import annotations
@@ -38,7 +42,7 @@ def main() -> None:
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("--figure", default=None,
                     help="only this benchmark (fig3..fig7, sweep_all, "
-                         "cora_end_to_end)")
+                         "cora_end_to_end, workloads)")
     ap.add_argument("--skip-roofline", action="store_true")
     ap.add_argument("--skip-conformance", action="store_true",
                     help="omit the conformance summary block from --json")

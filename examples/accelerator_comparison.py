@@ -1,17 +1,16 @@
-"""Comparative accelerator study (the paper's Sec. IV narrative, end to end):
-every registered dataflow across tile sizes, bandwidths, and reuse factors;
-the full-graph L-layer composition ("GCN-on-Cora, total movement"); and the
-TPU-pod reading of the same graph workloads.
+"""Comparative accelerator study (the paper's Sec. IV narrative, end to end)
+through the scenario front door (DESIGN.md §11): every evaluation below is
+a declarative, JSON-serializable batch handed to the batch planner — one
+broadcast closed-form call per dataflow, never a Python loop per point.
 
     PYTHONPATH=src python examples/accelerator_comparison.py
 """
 
 import numpy as np
 
-from repro.core import (FullGraphParams, MultiLayerModel, TiledGraphModel,
-                        paper_default_graph, registry)
-from repro.core.sweep import (fig5_iterations_vs_bandwidth, fig7_systolic_reuse,
-                              sweep_accelerators)
+from repro.api import Scenario, evaluate_scenarios, template
+from repro.core import registry
+from repro.core.sweep import fig5_iterations_vs_bandwidth, sweep_accelerators
 from repro.core.tpu_model import ring_spmm_traffic, spmm_feature_allgather
 
 
@@ -19,7 +18,7 @@ def main() -> None:
     names = registry.names()
 
     print("tile size sweep (defaults: N=30, T=5, B=1000, sigma=4, P=10K)")
-    print("one vectorized evaluation per accelerator, stacked:")
+    print("one scenario batch, one broadcast evaluation per accelerator:")
     K = np.array([256, 1024, 4096, 16384], dtype=np.float64)
     sw = sweep_accelerators(names, K=K)
     header = f"{'K':>7}" + "".join(f" {n + ' off':>15} {n + ' on':>13}" for n in names)
@@ -44,32 +43,46 @@ def main() -> None:
               f"(floor {iters.min():.0f} iterations)")
     print()
 
-    print("HyGCN systolic reuse (Fig. 7): loadweights bits at N=30:")
-    res = fig7_systolic_reuse(gamma=np.array([0.0, 0.5, 0.9, 0.99]))
-    lw = res.data_bits["loadweights"][:, 0]
-    for gamma, bits in zip(res.axes["gamma"], lw):
-        print(f"  Gamma={gamma:.2f}: {bits:>12.4g} bits")
+    print("HyGCN systolic reuse (Fig. 7 as a scenario batch): loadweights, N=30:")
+    gammas = [0.0, 0.5, 0.9, 0.99]
+    batch = [Scenario.tile("hygcn", hardware={"gamma": g}, label=f"G={g}")
+             for g in gammas]
+    res = evaluate_scenarios(batch)
+    for gamma, r in zip(gammas, res.results):
+        print(f"  Gamma={gamma:.2f}: {r.breakdown['loadweights']:>12.4g} bits")
     print()
 
     print("full-graph composition: 2-layer GCN on Cora (V=2708, E=10556,")
     print("widths 1433 -> 16 -> 7), tile capacity 1024, spill vs resident:")
-    cora = FullGraphParams(V=2708, E=10556, N=1433, T=7)
+    by_policy = {}
+    for residency in ("spill", "resident"):
+        tb = template("cora_end_to_end", tile_vertices=np.array([1024.0]),
+                      residency=residency)
+        by_policy[residency] = {r.scenario.dataflow: r
+                                for r in evaluate_scenarios(tb.scenarios).results}
     for accel in names:
-        row = {}
-        for residency in ("spill", "resident"):
-            model = TiledGraphModel(
-                MultiLayerModel(accel, [1433, 16, 7], residency=residency))
-            out = model.evaluate(cora)
-            row[residency] = out
-        n_tiles = int(row["spill"].meta["n_tiles"])
-        print(f"  {accel:10}: {n_tiles} tiles, "
-              f"total {float(row['spill'].total_bits()):.4g} bits "
-              f"(halo {float(row['spill']['haloreload'].data_bits):.3g}); "
+        spill, resident = by_policy["spill"][accel], by_policy["resident"][accel]
+        print(f"  {accel:10}: {int(spill.n_tiles)} tiles, "
+              f"total {spill.total_bits:.4g} bits "
+              f"(halo {spill.breakdown['haloreload']:.3g}); "
               f"resident saves "
-              f"{float(row['spill'].offchip_bits() - row['resident'].offchip_bits()):.3g} "
+              f"{spill.offchip_bits - resident.offchip_bits:.3g} "
               "off-chip bits")
     print("-> the question the single-tile tables can't answer: end-to-end")
     print("   movement, including inter-layer spills and inter-tile halos.\n")
+
+    print("workload bridges (§5 tile language): one-line queries, e.g. gemma2")
+    print("prefill-32k and dlrm serve-p99 across every registered dataflow:")
+    from repro.configs import get_arch
+    scenarios = (get_arch("gemma2-2b").to_scenarios(shapes=("prefill_32k",))
+                 + get_arch("dlrm-mlperf").to_scenarios(shapes=("serve_p99",)))
+    res = evaluate_scenarios(scenarios)
+    for r in res.results:
+        print(f"  {r.scenario.workload:24} {r.scenario.dataflow:12} "
+              f"total {r.total_bits:.3e} bits "
+              f"(off-chip {r.offchip_bits:.3e})")
+    print(f"  [{len(scenarios)} scenarios in {res.n_evaluations} broadcast "
+          "evaluations]\n")
 
     print("TPU-pod reading of the same question (our extension): moving")
     print("ogb_products features for one GCN layer on 256 chips —")

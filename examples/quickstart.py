@@ -1,13 +1,15 @@
-"""Quickstart: evaluate the paper's analytical models at the published
-defaults, print Table-III/IV-style breakdowns, and run one mini sweep.
+"""Quickstart: the scenario front door, then the paper's analytical models
+at the published defaults with Table-III/IV-style breakdowns and one mini
+sweep.
 
     PYTHONPATH=src python examples/quickstart.py
 """
 
 import numpy as np
 
+from repro.api import Scenario, evaluate_scenarios
 from repro.core import (EnGNHardwareParams, EnGNModel, HyGCNHardwareParams,
-                        HyGCNModel, paper_default_graph, tabulate)
+                        HyGCNModel, paper_default_graph, registry, tabulate)
 from repro.core.sweep import fig3_engn_movement
 from repro.core.tpu_model import (TPU_V5E, dp_gradient_sync, roofline,
                                   spmm_feature_allgather)
@@ -15,6 +17,20 @@ from repro.core.tpu_model import (TPU_V5E, dp_gradient_sync, roofline,
 
 def main() -> None:
     g = paper_default_graph(1024.0)
+
+    print("=" * 72)
+    print("The front door (DESIGN.md §11): one declarative, serializable")
+    print("scenario per evaluation — here every registered dataflow at the")
+    print("paper's Sec. IV defaults, batched into one call per dataflow")
+    print("=" * 72)
+    batch = [Scenario.tile(name, label=name) for name in registry.names()]
+    res = evaluate_scenarios(batch)
+    print(f"{'dataflow':14}{'total bits':>14}{'iterations':>12}{'off-chip':>14}")
+    for r in res.results:
+        print(f"{r.scenario.dataflow:14}{r.total_bits:>14.4g}"
+              f"{r.total_iterations:>12.0f}{r.offchip_bits:>14.4g}")
+    print(f"(JSON round trip: Scenario.from_json(s.to_json()) == s; try\n"
+          f" PYTHONPATH=src python -m repro.api --list)\n")
 
     print("=" * 72)
     print("EnGN per-tile data movement (Table III), K=1024, defaults")

@@ -1,0 +1,51 @@
+"""`repro.api` — the scenario front door (DESIGN.md §11).
+
+One declarative, serializable query API for every
+(dataflow x workload x graph x hardware x composition) evaluation:
+
+* :class:`~repro.api.scenario.Scenario` / :class:`~repro.api.scenario.
+  Composition` — pure-data, JSON-round-trippable description of one
+  evaluation.
+* :func:`~repro.api.planner.evaluate_scenarios` — the batch planner: one
+  broadcast closed-form call per plan group (no Python loop per
+  scenario), results in input order with per-term breakdowns.
+* :mod:`~repro.api.templates` — the paper's figures as named scenario
+  batches; the legacy ``figN_*`` sweep functions are thin clients.
+* ``python -m repro.api`` — the service-shaped CLI: evaluate scenario
+  files (``--scenario batch.json``), named templates (``--template``),
+  workload bridges (``--workload``), and emit ``BENCH_scenarios.json``.
+
+Workload configs join through :meth:`repro.configs.base.ArchDef.
+to_scenarios`, which translates each architecture's DESIGN.md §5
+tile-language mapping into evaluable scenarios across any set of
+registered dataflows.
+"""
+
+from .planner import (BatchResult, GroupResult, ScenarioResult,
+                      evaluate_groups, evaluate_scenario, evaluate_scenarios)
+from .scenario import (Composition, FULL_GRAPH_FIELDS, Scenario,
+                       TILE_GRAPH_FIELDS, dump_scenarios, load_scenarios,
+                       scenarios_to_dicts)
+from .templates import (TEMPLATES, TemplateBatch, template, template_names,
+                        tile_scenarios_from_graph)
+
+__all__ = [
+    "Scenario",
+    "Composition",
+    "TILE_GRAPH_FIELDS",
+    "FULL_GRAPH_FIELDS",
+    "load_scenarios",
+    "dump_scenarios",
+    "scenarios_to_dicts",
+    "ScenarioResult",
+    "GroupResult",
+    "BatchResult",
+    "evaluate_scenario",
+    "evaluate_scenarios",
+    "evaluate_groups",
+    "TemplateBatch",
+    "TEMPLATES",
+    "template",
+    "template_names",
+    "tile_scenarios_from_graph",
+]

@@ -1,0 +1,159 @@
+"""``python -m repro.api`` — the service-shaped scenario front door.
+
+Evaluate declarative scenario batches from any of three sources and print
+one result row per scenario (CSV on stdout), optionally emitting a
+machine-readable ``BENCH_scenarios.json``:
+
+* ``--scenario batch.json``  — a checked-in / client-supplied batch file
+  (``{"scenarios": [...]}`` or a bare list); repeatable.
+* ``--template fig3``        — a named figure template
+  (:mod:`repro.api.templates`).
+* ``--workload gcn-cora``    — a workload config's §5 tile-language bridge
+  (``ArchDef.to_scenarios``), optionally restricted by ``--shape`` /
+  ``--dataflows``.
+
+Exit status is non-zero on schema errors, on any ``expect`` golden-drift
+mismatch, and on any failed §10 conformance check — so a checked-in batch
+file is a CI gate (see ``.github/workflows/ci.yml``).
+"""
+
+from __future__ import annotations
+
+import argparse
+import csv
+import io
+import json
+import sys
+from typing import Optional, Sequence
+
+from .planner import BatchResult, evaluate_scenarios
+from .scenario import Scenario, load_scenarios
+from .templates import template, template_names
+
+__all__ = ["main", "build_scenarios"]
+
+
+def _print_listing() -> None:
+    from repro.core import registry
+
+    print("registered dataflows:")
+    for name in registry.names():
+        spec = registry.get(name)
+        runnable = " [runnable analogue]" if spec.has_runnable else ""
+        print(f"  {name:14} {len(spec.movements)} movement levels{runnable}")
+    print("\nscenario templates (--template NAME):")
+    for name in template_names():
+        print(f"  {name}")
+    try:
+        from repro.configs import all_archs
+    except Exception as exc:  # pragma: no cover - configs need jax
+        print(f"\nworkload bridges unavailable ({type(exc).__name__}: {exc})")
+        return
+    print("\nworkload bridges (--workload NAME [--shape SHAPE]):")
+    for arch in all_archs():
+        shapes = [s for s in arch.shapes if s not in arch.skips]
+        print(f"  {arch.name:20} [{arch.family}] shapes: {', '.join(shapes)}")
+
+
+def build_scenarios(args: argparse.Namespace) -> list[Scenario]:
+    if (args.shape or args.dataflows) and not args.workload:
+        raise ValueError("--shape/--dataflows only filter --workload "
+                         "bridges; they would be silently ignored for "
+                         "--scenario/--template sources")
+    scenarios: list[Scenario] = []
+    for path in args.scenario or ():
+        scenarios.extend(load_scenarios(path))
+    for name in args.template or ():
+        scenarios.extend(template(name).scenarios)
+    dataflows = (tuple(args.dataflows.split(",")) if args.dataflows else None)
+    for name in args.workload or ():
+        from repro.configs import get_arch
+
+        arch = get_arch(name)
+        shapes = tuple(args.shape) if args.shape else None
+        scenarios.extend(arch.to_scenarios(shapes=shapes,
+                                           dataflows=dataflows))
+    return scenarios
+
+
+def _print_rows(res: BatchResult) -> None:
+    rows = res.rows()
+    cols = list(rows[0]) if rows else []
+    buf = io.StringIO()
+    w = csv.DictWriter(buf, fieldnames=cols)
+    w.writeheader()
+    for r in rows:
+        w.writerow(r)
+    print(buf.getvalue(), end="")
+
+
+def main(argv: Optional[Sequence[str]] = None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="python -m repro.api",
+        description="Declarative scenario front door: evaluate "
+                    "(dataflow x workload x graph x hardware x composition) "
+                    "batches in broadcast closed form.")
+    ap.add_argument("--scenario", action="append", metavar="PATH",
+                    help="scenario batch JSON file (repeatable)")
+    ap.add_argument("--template", action="append", metavar="NAME",
+                    help=f"named template: {', '.join(template_names())}")
+    ap.add_argument("--workload", action="append", metavar="ARCH",
+                    help="workload config bridge (repro.configs name)")
+    ap.add_argument("--shape", action="append", metavar="SHAPE",
+                    help="restrict --workload to these shapes (repeatable)")
+    ap.add_argument("--dataflows", default=None, metavar="A,B,C",
+                    help="comma-separated dataflows for --workload "
+                         "(default: all registered)")
+    ap.add_argument("--list", action="store_true",
+                    help="list dataflows, templates, and workload bridges")
+    ap.add_argument("--json", nargs="?", const="BENCH_scenarios.json",
+                    default=None, metavar="PATH",
+                    help="write results JSON (default BENCH_scenarios.json)")
+    args = ap.parse_args(argv)
+
+    if args.list:
+        _print_listing()
+        if not (args.scenario or args.template or args.workload):
+            return 0
+
+    try:
+        scenarios = build_scenarios(args)
+    except (ValueError, TypeError, KeyError, OSError) as exc:
+        print(f"error: {exc}", file=sys.stderr)
+        return 2
+    if not scenarios:
+        ap.print_usage(sys.stderr)
+        print("error: no scenarios given (use --scenario/--template/"
+              "--workload, or --list)", file=sys.stderr)
+        return 2
+
+    try:
+        res = evaluate_scenarios(scenarios)
+    except (ValueError, TypeError, KeyError) as exc:
+        print(f"error: {exc}", file=sys.stderr)
+        return 2
+
+    _print_rows(res)
+    print(f"# {len(res.results)} scenarios in {res.n_evaluations} broadcast "
+          f"evaluations ({len(res.evaluations_per_dataflow())} dataflows)")
+
+    status = 0
+    for scenario, fails in res.expect_failures():
+        status = 1
+        name = scenario.label or scenario.workload or scenario.dataflow
+        for f in fails:
+            print(f"# GOLDEN DRIFT {name}: {f}", file=sys.stderr)
+    for r in res.results:
+        if r.conformance is not None and not r.conformance.get("ok", True):
+            status = 1
+            print(f"# CONFORMANCE FAILURE {r.scenario.dataflow}: "
+                  f"{r.conformance}", file=sys.stderr)
+
+    if args.json is not None:
+        payload = res.to_dict()
+        payload["status"] = "ok" if status == 0 else "failed"
+        with open(args.json, "w") as f:
+            json.dump(payload, f, indent=2, sort_keys=True)
+            f.write("\n")
+        print(f"# wrote {args.json}")
+    return status

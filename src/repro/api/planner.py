@@ -1,0 +1,335 @@
+"""Batch planner: evaluate scenario batches with one broadcast call per plan.
+
+``evaluate_scenarios`` groups scenarios by :meth:`Scenario.plan_key` —
+(dataflow, graph kind, hardware-override keys, composition structure) —
+and evaluates each group in **one** closed-form call: every numeric leaf
+(graph fields, hardware overrides, layer widths, tile capacities) is
+stacked along a leading batch axis and handed to the §4 broadcasting
+engine.  There is no Python loop per scenario at evaluation time; a batch
+of homogeneous scenarios costs exactly one evaluation per distinct
+dataflow (asserted in tests, DESIGN.md §11).
+
+Because the closed forms are elementwise float64 algebra, the stacked
+evaluation is bit-identical to evaluating each scenario alone — the
+pinned-golden and property tests rely on this.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass, field
+from typing import Any, Iterable, Mapping, Optional, Sequence
+
+import numpy as np
+
+from repro.core import registry
+from repro.core.compose import FullGraphParams, MultiLayerModel, TiledGraphModel
+from repro.core.notation import GraphTileParams
+from repro.core.terms import ModelOutput
+
+from .scenario import Scenario, TILE_GRAPH_FIELDS
+
+__all__ = [
+    "ScenarioResult",
+    "GroupResult",
+    "BatchResult",
+    "evaluate_scenario",
+    "evaluate_scenarios",
+    "evaluate_groups",
+]
+
+#: Relative tolerance for ``Scenario.expect`` pins.  The planner is
+#: bit-identical, but pinned values travel through JSON decimal repr.
+EXPECT_REL_TOL = 1e-12
+
+
+@dataclass(frozen=True)
+class ScenarioResult:
+    """One scenario's evaluated movement totals and per-term breakdown."""
+
+    scenario: Scenario
+    total_bits: float
+    total_iterations: float
+    offchip_bits: float
+    cache_bits: float
+    onchip_bits: float
+    breakdown: Mapping[str, float]
+    iteration_breakdown: Mapping[str, float]
+    n_tiles: Optional[float] = None
+    conformance: Optional[Mapping[str, Any]] = None
+    meta: Mapping[str, Any] = field(default_factory=dict)
+
+    @property
+    def expect_ok(self) -> Optional[bool]:
+        """None when the scenario pins nothing; else whether pins hold."""
+        if self.scenario.expect is None:
+            return None
+        return not self.expect_failures()
+
+    def expect_failures(self) -> list[str]:
+        fails = []
+        if self.scenario.expect is not None:
+            got = {"total_bits": self.total_bits,
+                   "total_iterations": self.total_iterations}
+            for key, want in self.scenario.expect.items():
+                have = got[key]
+                if not np.isclose(have, want, rtol=EXPECT_REL_TOL, atol=0.0):
+                    fails.append(f"{key}: expected {want!r}, got {have!r}")
+        return fails
+
+    def to_dict(self) -> dict:
+        out = {
+            "scenario": self.scenario.to_dict(),
+            "total_bits": self.total_bits,
+            "total_iterations": self.total_iterations,
+            "offchip_bits": self.offchip_bits,
+            "cache_bits": self.cache_bits,
+            "onchip_bits": self.onchip_bits,
+            "breakdown": dict(self.breakdown),
+            "iteration_breakdown": dict(self.iteration_breakdown),
+        }
+        if self.n_tiles is not None:
+            out["n_tiles"] = self.n_tiles
+        if self.scenario.expect is not None:
+            out["expect_ok"] = self.expect_ok
+        if self.conformance is not None:
+            out["conformance"] = dict(self.conformance)
+        return out
+
+
+@dataclass(frozen=True)
+class GroupResult:
+    """One broadcast evaluation: the scenarios it covered and the raw output.
+
+    ``output`` is the stacked :class:`~repro.core.terms.ModelOutput` whose
+    term arrays carry the batch axis (length ``len(indices)``); ``indices``
+    map batch positions back to the input scenario order.
+    """
+
+    dataflow: str
+    plan_key: tuple
+    indices: tuple[int, ...]
+    output: ModelOutput
+
+
+@dataclass(frozen=True)
+class BatchResult:
+    """Results in input order plus the evaluation plan that produced them."""
+
+    results: tuple[ScenarioResult, ...]
+    groups: tuple[GroupResult, ...]
+
+    @property
+    def n_evaluations(self) -> int:
+        """Broadcast closed-form calls performed (== number of groups)."""
+        return len(self.groups)
+
+    def evaluations_per_dataflow(self) -> dict[str, int]:
+        counts: dict[str, int] = {}
+        for g in self.groups:
+            counts[g.dataflow] = counts.get(g.dataflow, 0) + 1
+        return counts
+
+    def expect_failures(self) -> list[tuple[Scenario, list[str]]]:
+        out = []
+        for r in self.results:
+            fails = r.expect_failures()
+            if fails:
+                out.append((r.scenario, fails))
+        return out
+
+    def rows(self) -> list[dict]:
+        """Flat records (one per scenario) for CSV/JSON dumps."""
+        rows = []
+        for r in self.results:
+            s = r.scenario
+            rows.append({
+                "label": s.label, "workload": s.workload,
+                "dataflow": s.dataflow, "graph_kind": s.graph_kind,
+                "total_bits": r.total_bits,
+                "total_iterations": r.total_iterations,
+                "offchip_bits": r.offchip_bits,
+                "cache_bits": r.cache_bits,
+                "onchip_bits": r.onchip_bits,
+            })
+        return rows
+
+    def to_dict(self) -> dict:
+        return {
+            "n_scenarios": len(self.results),
+            "n_evaluations": self.n_evaluations,
+            "evaluations_per_dataflow": self.evaluations_per_dataflow(),
+            "results": [r.to_dict() for r in self.results],
+        }
+
+
+def _stack(values: Iterable[float]) -> np.ndarray:
+    return np.asarray(list(values), dtype=np.float64)
+
+
+def _group_hw(spec, scenarios: Sequence[Scenario]):
+    """Default hardware with the group's overrides stacked per field."""
+    keys = sorted(scenarios[0].hardware)
+    if not keys:
+        return None
+    hw = spec.hw_factory()
+    valid = {f.name for f in dataclasses.fields(hw)}
+    unknown = set(keys) - valid
+    if unknown:
+        raise ValueError(
+            f"unknown hardware override(s) {sorted(unknown)} for dataflow "
+            f"{spec.name!r}; valid fields: {sorted(valid)}")
+    return hw.replace(**{k: _stack(s.hardware[k] for s in scenarios)
+                         for k in keys})
+
+
+def _group_model(spec, scenarios: Sequence[Scenario]):
+    """The (possibly composed) model shared by one plan group."""
+    comp = scenarios[0].composition
+    if comp is None:
+        return spec
+    inner = spec
+    if comp.widths is not None:
+        widths = tuple(
+            _stack(s.composition.widths[i] for s in scenarios)
+            for i in range(len(comp.widths)))
+        inner = MultiLayerModel(spec, widths, residency=comp.residency)
+    if comp.tile_vertices is not None:
+        return TiledGraphModel(
+            inner,
+            tile_vertices=_stack(s.composition.tile_vertices
+                                 for s in scenarios),
+            halo_dedup=comp.halo_dedup)
+    return inner
+
+
+def _group_graph(scenarios: Sequence[Scenario]):
+    kind = scenarios[0].graph_kind
+    if kind == "tile":
+        return GraphTileParams(**{
+            f: _stack(s.graph[f] for s in scenarios)
+            for f in TILE_GRAPH_FIELDS})
+    return FullGraphParams(
+        V=_stack(s.graph["V"] for s in scenarios),
+        E=_stack(s.graph["E"] for s in scenarios),
+        N=_stack(s.graph["N"] for s in scenarios),
+        T=_stack(s.graph["T"] for s in scenarios),
+        high_degree_fraction=_stack(s.graph["high_degree_fraction"]
+                                    for s in scenarios),
+    )
+
+
+def _evaluate_group(scenarios: Sequence[Scenario]) -> ModelOutput:
+    spec = registry.get(scenarios[0].dataflow)
+    model = _group_model(spec, scenarios)
+    graph = _group_graph(scenarios)
+    hw = _group_hw(spec, scenarios)
+    # THE one broadcast closed-form call for this group.
+    return model.evaluate(graph, hw)
+
+
+def _conformance_summary(dataflow: str, points=None) -> dict:
+    """One-point §10 measured-vs-modeled check (lazy: compiles kernels)."""
+    spec = registry.get(dataflow)
+    if not spec.has_runnable:
+        return {"checked": False, "ok": True,
+                "reason": "no runnable kernel analogue (analytical-only)"}
+    from repro.core.conformance import OperatingPoint, conformance_records
+
+    pts = points if points is not None else (OperatingPoint(256, 16, 8, 128, 128),)
+    analogue = spec.runnable_analogue()
+    n = n_bad = 0
+    analytical = measured = 0.0
+    for pt in pts:
+        for rec in conformance_records(spec, pt, analogue=analogue):
+            n += 1
+            if not rec.ok:
+                n_bad += 1
+            if rec.movement == "hbm_total":
+                analytical += rec.analytical_bytes
+                measured += rec.measured_bytes
+    return {"checked": True, "ok": n_bad == 0, "records": n,
+            "violations": n_bad, "hbm_analytical_bytes": analytical,
+            "hbm_measured_bytes": measured}
+
+
+def evaluate_groups(scenarios: Sequence[Scenario]) -> tuple[GroupResult, ...]:
+    """Group a batch by plan key and run one broadcast call per group.
+
+    The sweep engine's hot path: it needs only the stacked per-group
+    :class:`~repro.core.terms.ModelOutput` (to reshape onto a figure
+    grid), so the per-scenario result materialization of
+    :func:`evaluate_scenarios` is skipped.
+    """
+    for i, s in enumerate(scenarios):
+        if not isinstance(s, Scenario):
+            raise TypeError(f"scenarios[{i}] is {type(s).__name__}, "
+                            "expected Scenario")
+    groups: dict[tuple, list[int]] = {}
+    for i, s in enumerate(scenarios):
+        groups.setdefault(s.plan_key(), []).append(i)
+    return tuple(
+        GroupResult(dataflow=scenarios[indices[0]].dataflow, plan_key=key,
+                    indices=tuple(indices),
+                    output=_evaluate_group([scenarios[i] for i in indices]))
+        for key, indices in groups.items())
+
+
+def evaluate_scenarios(scenarios: Sequence[Scenario], *,
+                       conformance_points=None) -> BatchResult:
+    """Evaluate a scenario batch: one broadcast call per plan group.
+
+    Results come back in input order.  Scenarios with ``conformance=True``
+    additionally trigger at most one §10 kernel-conformance run per
+    dataflow per batch (shared across the group — it compiles kernels, so
+    it is cached, never repeated per scenario).
+    """
+    scenarios = list(scenarios)
+    group_results = evaluate_groups(scenarios)
+    slots: list[Optional[ScenarioResult]] = [None] * len(scenarios)
+    conformance_cache: dict[str, dict] = {}
+    for grp in group_results:
+        indices = grp.indices
+        members = [scenarios[i] for i in indices]
+        out = grp.output
+        n = len(members)
+
+        def col(arr) -> np.ndarray:
+            return np.broadcast_to(np.asarray(arr, np.float64), (n,))
+
+        total_bits = col(out.total_bits())
+        total_iters = col(out.total_iterations())
+        offchip = col(out.offchip_bits())
+        cache = col(out.cache_bits())
+        onchip = col(out.onchip_bits())
+        per_term_bits = {t.name: col(t.data_bits) for t in out.terms}
+        per_term_iters = {t.name: col(t.iterations) for t in out.terms}
+        n_tiles = out.meta.get("n_tiles")
+        n_tiles_col = None if n_tiles is None else col(n_tiles)
+        for j, i in enumerate(indices):
+            s = members[j]
+            conf = None
+            if s.conformance:
+                if s.dataflow not in conformance_cache:
+                    conformance_cache[s.dataflow] = _conformance_summary(
+                        s.dataflow, conformance_points)
+                conf = conformance_cache[s.dataflow]
+            slots[i] = ScenarioResult(
+                scenario=s,
+                total_bits=float(total_bits[j]),
+                total_iterations=float(total_iters[j]),
+                offchip_bits=float(offchip[j]),
+                cache_bits=float(cache[j]),
+                onchip_bits=float(onchip[j]),
+                breakdown={k: float(v[j]) for k, v in per_term_bits.items()},
+                iteration_breakdown={k: float(v[j])
+                                     for k, v in per_term_iters.items()},
+                n_tiles=None if n_tiles_col is None else float(n_tiles_col[j]),
+                conformance=conf,
+            )
+    return BatchResult(results=tuple(slots), groups=group_results)
+
+
+def evaluate_scenario(scenario: Scenario, **kw) -> ScenarioResult:
+    """Evaluate one scenario (a batch of one)."""
+    return evaluate_scenarios([scenario], **kw).results[0]

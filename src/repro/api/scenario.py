@@ -1,0 +1,431 @@
+"""`Scenario`: one (dataflow x workload x graph x hardware x composition)
+evaluation as pure, serializable data.
+
+The paper's stated goal is *comparative* analysis "for a set of hardware,
+GNN model and input graph parameters"; a :class:`Scenario` is the repo's
+single declarative description of one cell of that cross-product
+(DESIGN.md §11).  It is a plain frozen dataclass of JSON-able scalars —
+no numpy arrays, no callables, no registry handles — so a scenario can be
+written to disk, shipped over a wire, diffed, or replayed bit-identically.
+The batch planner (:mod:`repro.api.planner`) groups scenarios that share a
+*plan signature* and evaluates each group in ONE broadcast closed-form
+call, stacking every numeric leaf along a batch axis.
+
+Graph kinds
+-----------
+``tile``  — the paper's Table II single-tile parameters ``N, T, K, L, P``.
+``full``  — a whole graph ``V, E, N, T`` (plus ``high_degree_fraction``),
+            evaluated through the §7 composition layer; requires a
+            :class:`Composition` with ``tile_vertices``.
+
+A scenario's ``composition`` adds the §7 layers on top of the dataflow:
+``widths`` chains an L-layer :class:`~repro.core.compose.MultiLayerModel`
+(``residency`` = ``"spill"`` / ``"resident"``), ``tile_vertices`` covers a
+full graph with a :class:`~repro.core.compose.TiledGraphModel` schedule.
+
+``hardware`` holds overrides applied to the dataflow's default hardware
+record (``spec.hw_factory().replace(**hardware)``); ``expect`` optionally
+pins totals (``total_bits`` / ``total_iterations``) so a checked-in
+scenario file doubles as a golden-drift gate (the CLI exits non-zero on
+mismatch); ``conformance`` requests the DESIGN.md §10 measured-vs-modeled
+check for dataflows with a runnable kernel analogue.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import json
+import math
+from dataclasses import dataclass, field
+from typing import Any, Mapping, Optional, Sequence
+
+__all__ = [
+    "Composition",
+    "Scenario",
+    "TILE_GRAPH_FIELDS",
+    "FULL_GRAPH_FIELDS",
+    "load_scenarios",
+    "dump_scenarios",
+    "scenarios_to_dicts",
+]
+
+#: Table II single-tile graph parameters, in the paper's order.
+TILE_GRAPH_FIELDS = ("N", "T", "K", "L", "P")
+#: Full-graph (composition-layer) parameters; high_degree_fraction optional.
+FULL_GRAPH_FIELDS = ("V", "E", "N", "T")
+
+_RESIDENCIES = ("spill", "resident")
+
+
+def _require_number(value: Any, what: str) -> float:
+    if isinstance(value, bool) or not isinstance(value, (int, float)):
+        raise TypeError(f"{what} must be a plain number (scenarios are pure "
+                        f"data); got {value!r} of type {type(value).__name__}")
+    out = float(value)
+    if not math.isfinite(out):
+        raise ValueError(f"{what} must be finite, got {value!r}")
+    return out
+
+
+@dataclass(frozen=True)
+class Composition:
+    """Declarative §7 composition policy: layer widths + residency + tiling.
+
+    ``widths`` (``[N_0, ..., N_L]``, >= 2 entries) chains L layers;
+    ``tile_vertices`` (>= 1) covers a full graph with a tile schedule and
+    halo reloads (``halo_dedup >= 1`` divides halo traffic).  Both are
+    optional and compose; a ``Composition()`` with neither is rejected.
+    """
+
+    widths: Optional[tuple[float, ...]] = None
+    residency: str = "spill"
+    tile_vertices: Optional[float] = None
+    halo_dedup: float = 1.0
+
+    def __post_init__(self) -> None:
+        if self.widths is not None:
+            w = tuple(_require_number(x, "Composition.widths entry")
+                      for x in self.widths)
+            if len(w) < 2:
+                raise ValueError(f"Composition.widths needs >= 2 entries "
+                                 f"(got {list(w)}): a layer maps "
+                                 "widths[l] -> widths[l+1]")
+            object.__setattr__(self, "widths", w)
+        if self.residency not in _RESIDENCIES:
+            raise ValueError(f"unknown residency {self.residency!r}; "
+                             f"expected one of {_RESIDENCIES}")
+        if self.tile_vertices is not None:
+            tv = _require_number(self.tile_vertices, "Composition.tile_vertices")
+            if tv < 1:
+                raise ValueError(f"Composition.tile_vertices must be >= 1, "
+                                 f"got {self.tile_vertices!r}")
+            object.__setattr__(self, "tile_vertices", tv)
+        object.__setattr__(self, "halo_dedup",
+                           _require_number(self.halo_dedup,
+                                           "Composition.halo_dedup"))
+        if self.halo_dedup < 1.0:
+            raise ValueError("Composition.halo_dedup must be >= 1 "
+                             "(it divides halo traffic)")
+        if self.widths is None and self.tile_vertices is None:
+            raise ValueError("empty Composition: give widths (multi-layer) "
+                             "and/or tile_vertices (full-graph tiling), or "
+                             "omit the composition entirely")
+        # Reject knobs that would be silently ignored: residency only
+        # matters between chained layers, halo_dedup only divides tiled
+        # halo traffic.  Accepting them would also split plan groups on a
+        # value with zero effect.
+        if self.widths is None and self.residency != "spill":
+            raise ValueError(
+                f"residency={self.residency!r} without widths has no "
+                "effect (residency governs inter-layer hand-off); give "
+                "widths or drop the residency")
+        if self.tile_vertices is None and self.halo_dedup != 1.0:
+            raise ValueError(
+                f"halo_dedup={self.halo_dedup!r} without tile_vertices has "
+                "no effect (it divides inter-tile halo traffic); give "
+                "tile_vertices or drop the halo_dedup")
+
+    @property
+    def n_layers(self) -> Optional[int]:
+        return None if self.widths is None else len(self.widths) - 1
+
+    def signature(self) -> tuple:
+        """Structural part of the plan key: what cannot batch numerically.
+
+        Layer count, residency, tiled-or-not, and the (scalar-only)
+        halo_dedup must match for two scenarios to share one broadcast
+        evaluation; the widths *values* and tile_vertices stack.
+        """
+        return (self.n_layers, self.residency,
+                self.tile_vertices is not None, self.halo_dedup)
+
+    def to_dict(self) -> dict:
+        # Fields at their from_dict defaults may be omitted; anything else
+        # must serialize regardless of which other fields are set, or the
+        # round trip would not be value-identical.
+        out: dict[str, Any] = {}
+        if self.widths is not None:
+            out["widths"] = list(self.widths)
+        if self.residency != "spill":
+            out["residency"] = self.residency
+        if self.tile_vertices is not None:
+            out["tile_vertices"] = self.tile_vertices
+        if self.halo_dedup != 1.0:
+            out["halo_dedup"] = self.halo_dedup
+        return out
+
+    @classmethod
+    def from_dict(cls, data: Mapping[str, Any]) -> "Composition":
+        known = {"widths", "residency", "tile_vertices", "halo_dedup"}
+        unknown = set(data) - known
+        if unknown:
+            raise ValueError(f"unknown Composition keys {sorted(unknown)}; "
+                             f"expected a subset of {sorted(known)}")
+        widths = data.get("widths")
+        return cls(
+            widths=None if widths is None else tuple(widths),
+            residency=data.get("residency", "spill"),
+            tile_vertices=data.get("tile_vertices"),
+            halo_dedup=data.get("halo_dedup", 1.0),
+        )
+
+
+def _normalized_graph(graph: Mapping[str, Any]) -> tuple[dict, str]:
+    keys = set(graph)
+    if {"V", "E"} & keys:
+        missing = set(FULL_GRAPH_FIELDS) - keys
+        if missing:
+            raise ValueError(f"full-graph scenario is missing {sorted(missing)}; "
+                             f"required: {FULL_GRAPH_FIELDS}")
+        allowed = set(FULL_GRAPH_FIELDS) | {"high_degree_fraction"}
+        extra = keys - allowed
+        if extra:
+            raise ValueError(f"unknown full-graph keys {sorted(extra)}; "
+                             f"allowed: {sorted(allowed)}")
+        out = {f: _require_number(graph[f], f"graph.{f}")
+               for f in FULL_GRAPH_FIELDS}
+        out["high_degree_fraction"] = _require_number(
+            graph.get("high_degree_fraction", 0.1),
+            "graph.high_degree_fraction")
+        return out, "full"
+    missing = set(TILE_GRAPH_FIELDS) - keys
+    extra = keys - set(TILE_GRAPH_FIELDS)
+    if missing or extra:
+        raise ValueError(
+            f"tile scenario graph must give exactly {TILE_GRAPH_FIELDS} "
+            f"(missing {sorted(missing)}, unknown {sorted(extra)}); "
+            "use Scenario.tile(...) to fill the paper's defaults, or give "
+            "V/E for a full-graph scenario")
+    return ({f: _require_number(graph[f], f"graph.{f}")
+             for f in TILE_GRAPH_FIELDS}, "tile")
+
+
+@dataclass(frozen=True)
+class Scenario:
+    """One declarative, JSON-round-trippable evaluation request.
+
+    Attributes:
+      dataflow: registered accelerator name (``repro.core.registry``).
+      graph: tile parameters (``N,T,K,L,P``) or full-graph parameters
+        (``V,E,N,T`` + optional ``high_degree_fraction``).
+      hardware: overrides applied to the dataflow's default hardware
+        record; keys must be fields of that record.
+      composition: optional §7 policy (layer widths / residency / tiling).
+      conformance: request the §10 measured-vs-modeled check (one
+        operating point) for dataflows with a runnable kernel analogue.
+      expect: optional pinned totals (``total_bits``, ``total_iterations``)
+        — the golden-drift gate for checked-in scenario files.
+      label / workload: free-form identification carried through results.
+    """
+
+    dataflow: str
+    graph: Mapping[str, float]
+    hardware: Mapping[str, float] = field(default_factory=dict)
+    composition: Optional[Composition] = None
+    conformance: bool = False
+    expect: Optional[Mapping[str, float]] = None
+    label: str = ""
+    workload: str = ""
+
+    def __post_init__(self) -> None:
+        if not isinstance(self.dataflow, str) or not self.dataflow:
+            raise ValueError(f"dataflow must be a non-empty accelerator "
+                             f"name, got {self.dataflow!r}")
+        graph, kind = _normalized_graph(dict(self.graph))
+        object.__setattr__(self, "graph", graph)
+        object.__setattr__(self, "_graph_kind", kind)
+        hardware = {str(k): _require_number(v, f"hardware.{k}")
+                    for k, v in dict(self.hardware).items()}
+        object.__setattr__(self, "hardware", hardware)
+        if self.composition is not None and not isinstance(self.composition,
+                                                           Composition):
+            object.__setattr__(self, "composition",
+                               Composition.from_dict(self.composition))
+        tiled = (self.composition is not None
+                 and self.composition.tile_vertices is not None)
+        if kind == "full" and not tiled:
+            raise ValueError(
+                "a full-graph scenario (V/E) needs a composition with "
+                "tile_vertices — the tile schedule is what maps V/E onto "
+                "the per-tile closed forms (DESIGN.md §7)")
+        if kind == "tile" and tiled:
+            raise ValueError(
+                "tile_vertices tiling requires a full-graph scenario "
+                "(give V/E instead of K/L/P)")
+        if self.expect is not None:
+            known = {"total_bits", "total_iterations"}
+            unknown = set(self.expect) - known
+            if unknown:
+                raise ValueError(f"unknown expect keys {sorted(unknown)}; "
+                                 f"expected a subset of {sorted(known)}")
+            object.__setattr__(self, "expect",
+                               {k: _require_number(v, f"expect.{k}")
+                                for k, v in dict(self.expect).items()})
+
+    # -- constructors -----------------------------------------------------
+    @classmethod
+    def tile(cls, dataflow: str, *, K: float = 1024.0, N: float = 30.0,
+             T: float = 5.0, L: Optional[float] = None,
+             P: Optional[float] = None, edge_factor: float = 10.0,
+             high_degree_fraction: float = 0.1, **kw: Any) -> "Scenario":
+        """Single-tile scenario at the paper's Sec. IV defaults.
+
+        Mirrors :func:`repro.core.notation.paper_default_graph`: unless
+        given, ``L = floor(K * high_degree_fraction)`` and
+        ``P = K * edge_factor``.
+        """
+        K = _require_number(K, "K")
+        graph = {
+            "N": _require_number(N, "N"), "T": _require_number(T, "T"),
+            "K": K,
+            "L": (math.floor(K * high_degree_fraction) if L is None
+                  else _require_number(L, "L")),
+            "P": K * edge_factor if P is None else _require_number(P, "P"),
+        }
+        return cls(dataflow=dataflow, graph=graph, **kw)
+
+    @classmethod
+    def full_graph(cls, dataflow: str, *, V: float, E: float, N: float,
+                   T: float, tile_vertices: float = 1024.0,
+                   widths: Optional[Sequence[float]] = None,
+                   residency: str = "spill", halo_dedup: float = 1.0,
+                   high_degree_fraction: float = 0.1, **kw: Any) -> "Scenario":
+        """Full-graph scenario: tile schedule + optional multi-layer chain."""
+        comp = Composition(
+            widths=None if widths is None else tuple(widths),
+            residency=residency, tile_vertices=tile_vertices,
+            halo_dedup=halo_dedup)
+        graph = {"V": V, "E": E, "N": N, "T": T,
+                 "high_degree_fraction": high_degree_fraction}
+        return cls(dataflow=dataflow, graph=graph, composition=comp, **kw)
+
+    # -- structure --------------------------------------------------------
+    def __hash__(self) -> int:
+        # frozen=True would auto-hash over the dict fields and raise; hash
+        # the canonical tuple instead so scenarios work in sets/dict keys.
+        expect = (None if self.expect is None
+                  else tuple(sorted(self.expect.items())))
+        return hash((self.dataflow, tuple(sorted(self.graph.items())),
+                     tuple(sorted(self.hardware.items())), self.composition,
+                     self.conformance, expect, self.label, self.workload))
+
+    @property
+    def graph_kind(self) -> str:
+        """``"tile"`` or ``"full"``."""
+        return self._graph_kind  # type: ignore[attr-defined]
+
+    def plan_key(self) -> tuple:
+        """Hashable signature of everything that cannot batch numerically.
+
+        Scenarios sharing a plan key differ only in numeric leaves (graph
+        values, hardware override values, widths values, tile capacities),
+        all of which stack along one batch axis for a single broadcast
+        evaluation (DESIGN.md §11).
+        """
+        comp = None if self.composition is None else self.composition.signature()
+        return (self.dataflow, self.graph_kind,
+                tuple(sorted(self.hardware)), comp)
+
+    # -- serialization ----------------------------------------------------
+    def to_dict(self) -> dict:
+        out: dict[str, Any] = {"dataflow": self.dataflow,
+                               "graph": dict(self.graph)}
+        if self.hardware:
+            out["hardware"] = dict(self.hardware)
+        if self.composition is not None:
+            out["composition"] = self.composition.to_dict()
+        if self.conformance:
+            out["conformance"] = True
+        if self.expect is not None:
+            out["expect"] = dict(self.expect)
+        if self.label:
+            out["label"] = self.label
+        if self.workload:
+            out["workload"] = self.workload
+        return out
+
+    @classmethod
+    def from_dict(cls, data: Mapping[str, Any]) -> "Scenario":
+        known = {"dataflow", "graph", "hardware", "composition",
+                 "conformance", "expect", "label", "workload"}
+        unknown = set(data) - known
+        if unknown:
+            raise ValueError(f"unknown Scenario keys {sorted(unknown)}; "
+                             f"expected a subset of {sorted(known)}")
+        for req in ("dataflow", "graph"):
+            if req not in data:
+                raise ValueError(f"Scenario is missing required key {req!r}")
+        comp = data.get("composition")
+        return cls(
+            dataflow=data["dataflow"],
+            graph=data["graph"],
+            hardware=data.get("hardware", {}),
+            composition=(None if comp is None else
+                         Composition.from_dict(comp)),
+            conformance=bool(data.get("conformance", False)),
+            expect=data.get("expect"),
+            label=data.get("label", ""),
+            workload=data.get("workload", ""),
+        )
+
+    def to_json(self, **json_kw: Any) -> str:
+        return json.dumps(self.to_dict(), sort_keys=True, **json_kw)
+
+    @classmethod
+    def from_json(cls, text: str) -> "Scenario":
+        return cls.from_dict(json.loads(text))
+
+    def replace(self, **kw: Any) -> "Scenario":
+        return dataclasses.replace(self, **kw)
+
+
+def _trusted_tile(dataflow: str, graph: Mapping[str, float],
+                  hardware: Mapping[str, float], label: str = "",
+                  workload: str = "") -> Scenario:
+    """Construct a plain tile Scenario bypassing validation (hot path).
+
+    For the figure templates, which build one scenario per grid cell from
+    values they already normalized (finite float64s, exactly the tile
+    field set, no composition): skipping ``__post_init__`` keeps the
+    legacy sweep functions within a small factor of their pre-redesign
+    cost.  Callers outside :mod:`repro.api.templates` must use the public
+    constructors.
+    """
+    s = object.__new__(Scenario)
+    set_ = object.__setattr__
+    set_(s, "dataflow", dataflow)
+    set_(s, "graph", dict(graph))
+    set_(s, "hardware", dict(hardware))
+    set_(s, "composition", None)
+    set_(s, "conformance", False)
+    set_(s, "expect", None)
+    set_(s, "label", label)
+    set_(s, "workload", workload)
+    set_(s, "_graph_kind", "tile")
+    return s
+
+
+def scenarios_to_dicts(scenarios: Sequence[Scenario]) -> dict:
+    return {"scenarios": [s.to_dict() for s in scenarios]}
+
+
+def dump_scenarios(scenarios: Sequence[Scenario], path: str) -> None:
+    """Write a scenario batch file: ``{"scenarios": [...]}``."""
+    with open(path, "w") as f:
+        json.dump(scenarios_to_dicts(scenarios), f, indent=2, sort_keys=True)
+        f.write("\n")
+
+
+def load_scenarios(path: str) -> list[Scenario]:
+    """Read a batch file: ``{"scenarios": [...]}`` or a bare JSON list."""
+    with open(path) as f:
+        data = json.load(f)
+    if isinstance(data, Mapping):
+        if "scenarios" not in data:
+            raise ValueError(f"{path}: scenario batch object must carry a "
+                             "'scenarios' list")
+        data = data["scenarios"]
+    if not isinstance(data, list):
+        raise ValueError(f"{path}: expected a scenario list or "
+                         "{'scenarios': [...]} object")
+    return [Scenario.from_dict(d) for d in data]

@@ -35,5 +35,20 @@ def all_cells(*, include_skipped: bool = False) -> list[tuple[str, str, str]]:
     return out
 
 
+def workload_scenarios(archs=None, *, dataflows=None, **kw) -> list:
+    """Scenario batch over many workloads: the front-door one-liner.
+
+    ``evaluate_scenarios(workload_scenarios(["smollm-135m", "dlrm-mlperf"]))``
+    answers every (workload shape x dataflow) movement query in one
+    broadcast evaluation per dataflow (DESIGN.md §11).
+    """
+    names = list(archs) if archs is not None else sorted(REGISTRY)
+    out: list = []
+    for name in names:
+        out.extend(get_arch(name).to_scenarios(dataflows=dataflows, **kw))
+    return out
+
+
 __all__ = ["REGISTRY", "get_arch", "all_archs", "all_cells", "ArchDef",
-           "ShapeSpec", "LM_SHAPES", "GNN_SHAPES", "RECSYS_SHAPES"]
+           "ShapeSpec", "LM_SHAPES", "GNN_SHAPES", "RECSYS_SHAPES",
+           "workload_scenarios"]

@@ -11,7 +11,7 @@ Each ``configs/<id>.py`` exports an ``ARCH`` ArchDef binding:
 from __future__ import annotations
 
 from dataclasses import dataclass, field
-from typing import Any, Callable, Mapping, Optional
+from typing import Any, Callable, Mapping, Optional, Sequence
 
 __all__ = ["ShapeSpec", "ArchDef", "LM_SHAPES", "GNN_SHAPES", "RECSYS_SHAPES"]
 
@@ -66,6 +66,24 @@ class ArchDef:
     # shape name -> reason, for mandated skips (long_500k on pure full attn).
     skips: Mapping[str, str] = field(default_factory=dict)
     notes: str = ""
+    # DESIGN.md §5 tile-language hook: (config, shape params) -> the
+    # per-layer feature widths [N_0, ..., N_L] this architecture chains.
+    # None falls back to the family-generic mapping in configs/scenarios.py.
+    scenario_widths: Optional[Callable[[Any, Mapping[str, Any]],
+                                       Sequence[float]]] = None
 
     def cells(self) -> list[tuple[str, str]]:
         return [(self.name, s) for s in self.shapes if s not in self.skips]
+
+    def to_scenarios(self, *, shapes: Optional[Sequence[str]] = None,
+                     dataflows: Optional[Sequence[str]] = None,
+                     **kw: Any) -> list:
+        """This workload's §5 tile-language mapping as evaluable scenarios.
+
+        One :class:`repro.api.Scenario` per (shape, dataflow): the
+        architecture's movement totals across every registered dataflow
+        become one batched ``repro.api.evaluate_scenarios`` query (the
+        scenario front door, DESIGN.md §11).
+        """
+        from .scenarios import arch_scenarios
+        return arch_scenarios(self, shapes=shapes, dataflows=dataflows, **kw)

@@ -22,4 +22,7 @@ ARCH = ArchDef(name="dlrm-mlperf", family="recsys",
                shapes=RECSYS_SHAPES,
                notes="Tables row-sharded over the model axis (vocab-parallel "
                      "lookup + psum baseline; all-to-all is the §Perf "
-                     "optimization).")
+                     "optimization).  Scenario bridge (§5): a batch is a "
+                     "tile of K = batch example-vertices each gathering "
+                     "n_sparse embedding rows (P = 26K edges, N = 128); "
+                     "combination is the dot interaction + top MLP (T = 1).")

@@ -15,9 +15,16 @@ def make_smoke_config(**kw) -> EquiformerV2Config:
                               l_max=2, m_max=1, n_heads=4, d_in=8, **kw)
 
 
+def scenario_widths(cfg, params) -> list[int]:
+    """§5 tile language: irreps flatten to N_eff = (l_max+1)^2 * C per layer."""
+    n_eff = (cfg.l_max + 1) ** 2 * cfg.d_hidden
+    return [params.get("d_feat", cfg.d_in)] + [n_eff] * cfg.n_layers
+
+
 ARCH = ArchDef(name="equiformer-v2", family="gnn",
                make_config=make_config, make_smoke_config=make_smoke_config,
                shapes=GNN_SHAPES,
                notes="Irrep features flatten to N_eff = (l_max+1)^2 * C for "
                      "the paper's tile models (DESIGN.md §5). Self-loop-free "
-                     "edge lists required (zero edge vectors have no frame).")
+                     "edge lists required (zero edge vectors have no frame).",
+               scenario_widths=scenario_widths)

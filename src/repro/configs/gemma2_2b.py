@@ -34,5 +34,7 @@ ARCH = ArchDef(
     make_config=make_config, make_smoke_config=make_smoke_config,
     shapes=LM_SHAPES,
     notes="8 heads < tp=16: attention uses context parallelism "
-          "(shard_map, q sequence-sharded, kv all-gathered).",
+          "(shard_map, q sequence-sharded, kv all-gathered).  Scenario "
+          "bridge: the 4k sliding window bounds the banded-graph "
+          "neighborhood, so P = K * 4096 (DESIGN.md §5).",
 )

@@ -1,0 +1,150 @@
+"""Workload -> scenario bridges: the DESIGN.md §5 tile language as queries.
+
+Each workload config (``configs/<id>.py``) describes a real architecture;
+this module translates one (architecture, input shape) cell into the
+paper's (N, T, K, L, P) tile language and emits one evaluable
+:class:`repro.api.Scenario` per requested dataflow — so, e.g., smollm /
+gemma2 / equiformer-v2 / dlrm movement totals across all five registered
+dataflows are a one-line query::
+
+    from repro.api import evaluate_scenarios
+    from repro.configs import get_arch
+    res = evaluate_scenarios(get_arch("gemma2-2b").to_scenarios())
+
+Family mappings (non-obvious cases recorded in DESIGN.md §5/§11):
+
+* **lm** — attention read as a dense GNN on a banded graph: one sequence
+  is one tile of K = seq token-vertices; the tightest attention window W
+  (full-causal layers contribute W = seq) bounds the per-token
+  neighborhood, so P = K * W; the layer stack chains via a multi-layer
+  composition with widths ``[d_model] * (n_layers + 1)``.
+* **gnn** — the graph is the graph: V/E from the shape (graph-batched
+  shapes multiply by ``batch``), feature widths from the model config
+  (the per-arch ``scenario_widths`` hook; EquiformerV2 flattens irreps to
+  ``(l_max+1)^2 * C``), covered by a tile schedule (full-graph scenario).
+* **recsys** — the embedding gather is the aggregation: a batch of
+  examples is a tile of K = batch destination vertices, each pulling
+  ``n_sparse * multi_hot`` embedding rows (P edges) of N = embed_dim
+  features; combination is the interaction + top MLP (T = its output).
+"""
+
+from __future__ import annotations
+
+from typing import Any, Mapping, Optional, Sequence
+
+from .base import ArchDef, ShapeSpec
+
+__all__ = ["arch_scenarios"]
+
+
+def _widths(arch: ArchDef, cfg: Any, params: Mapping[str, Any],
+            fallback) -> tuple[float, ...]:
+    fn = arch.scenario_widths or fallback
+    return tuple(float(w) for w in fn(cfg, params))
+
+
+def _lm_generic_widths(cfg: Any, params: Mapping[str, Any]) -> list[float]:
+    return [cfg.d_model] * (cfg.n_layers + 1)
+
+
+def _gnn_generic_widths(cfg: Any, params: Mapping[str, Any]) -> list[float]:
+    d_in = params.get("d_feat", getattr(cfg, "d_in", None))
+    if d_in is None:
+        raise ValueError(f"cannot infer feature widths for {cfg!r}; give the "
+                         "arch a scenario_widths hook")
+    return ([d_in] + [cfg.d_hidden] * (cfg.n_layers - 1)
+            + [getattr(cfg, "n_classes", getattr(cfg, "d_out", cfg.d_hidden))])
+
+
+def _lm_scenarios(arch: ArchDef, shape: ShapeSpec, dataflows, Scenario,
+                  *, high_degree_fraction: float, **_kw) -> list:
+    cfg = arch.make_config()
+    seq = float(shape.params["seq"])
+    pattern = getattr(cfg, "window_pattern", (None,)) or (None,)
+    windows = [seq if w is None else float(w) for w in pattern]
+    W = min(min(windows), seq)
+    widths = _widths(arch, cfg, shape.params, _lm_generic_widths)
+    return [
+        Scenario.tile(
+            df, K=seq, N=widths[0], T=widths[-1], P=seq * W,
+            high_degree_fraction=high_degree_fraction,
+            composition={"widths": list(widths), "residency": "spill"},
+            label=f"{arch.name}/{shape.name}@{df}",
+            workload=f"{arch.name}/{shape.name}")
+        for df in dataflows
+    ]
+
+
+def _gnn_scenarios(arch: ArchDef, shape: ShapeSpec, dataflows, Scenario,
+                   *, tile_vertices: float, high_degree_fraction: float,
+                   **_kw) -> list:
+    p = shape.params
+    batch = float(p.get("batch", 1))
+    V = float(p["n_nodes"]) * batch
+    E = float(p["n_edges"]) * batch
+    cfg = arch.make_config()
+    widths = _widths(arch, cfg, p, _gnn_generic_widths)
+    return [
+        Scenario.full_graph(
+            df, V=V, E=E, N=widths[0], T=widths[-1],
+            tile_vertices=min(tile_vertices, max(V, 1.0)),
+            widths=widths, residency="spill",
+            high_degree_fraction=high_degree_fraction,
+            label=f"{arch.name}/{shape.name}@{df}",
+            workload=f"{arch.name}/{shape.name}")
+        for df in dataflows
+    ]
+
+
+def _recsys_scenarios(arch: ArchDef, shape: ShapeSpec, dataflows, Scenario,
+                      *, high_degree_fraction: float, **_kw) -> list:
+    cfg = arch.make_config()
+    K = float(shape.params.get("batch", 1)) \
+        * float(shape.params.get("n_candidates", 1))
+    P = K * cfg.n_sparse * getattr(cfg, "multi_hot", 1)
+    T = float(cfg.top_mlp[-1])
+    return [
+        Scenario.tile(
+            df, K=K, N=float(cfg.embed_dim), T=T, P=P,
+            high_degree_fraction=high_degree_fraction,
+            label=f"{arch.name}/{shape.name}@{df}",
+            workload=f"{arch.name}/{shape.name}")
+        for df in dataflows
+    ]
+
+
+_FAMILIES = {"lm": _lm_scenarios, "gnn": _gnn_scenarios,
+             "recsys": _recsys_scenarios}
+
+
+def arch_scenarios(arch: ArchDef, *,
+                   shapes: Optional[Sequence[str]] = None,
+                   dataflows: Optional[Sequence[str]] = None,
+                   tile_vertices: float = 1024.0,
+                   high_degree_fraction: float = 0.1) -> list:
+    """One Scenario per (shape, dataflow) for a workload config.
+
+    ``shapes`` defaults to every non-skipped shape of the arch;
+    ``dataflows`` to every registered dataflow.  The result is pure data —
+    hand it to :func:`repro.api.evaluate_scenarios` (the planner batches
+    all of it into one broadcast evaluation per dataflow).
+    """
+    from repro.api.scenario import Scenario
+    if arch.family not in _FAMILIES:
+        raise ValueError(f"no scenario bridge for family {arch.family!r} "
+                         f"(arch {arch.name!r})")
+    if dataflows is None:
+        from repro.core import registry
+        dataflows = registry.names()
+    shape_names = (tuple(shapes) if shapes is not None
+                   else tuple(s for s in arch.shapes if s not in arch.skips))
+    out: list = []
+    for sname in shape_names:
+        if sname not in arch.shapes:
+            raise KeyError(f"arch {arch.name!r} has no shape {sname!r}; "
+                           f"available: {sorted(arch.shapes)}")
+        out.extend(_FAMILIES[arch.family](
+            arch, arch.shapes[sname], tuple(dataflows), Scenario,
+            tile_vertices=float(tile_vertices),
+            high_degree_fraction=float(high_degree_fraction)))
+    return out

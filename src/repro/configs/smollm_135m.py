@@ -27,5 +27,7 @@ ARCH = ArchDef(
     shapes=LM_SHAPES,
     skips={"long_500k": "pure full-attention arch; 500k decode requires "
                         "sub-quadratic attention (DESIGN.md §5)"},
-    notes="9 heads < tp=16: context-parallel attention path.",
+    notes="9 heads < tp=16: context-parallel attention path.  Scenario "
+          "bridge: full-causal attention, so the banded-graph window is "
+          "W = seq (P = K^2 per tile).",
 )

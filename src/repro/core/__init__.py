@@ -20,6 +20,11 @@ Public surface:
 * :mod:`repro.core.conformance` — measured-vs-modeled conformance: pins
   every dataflow with a runnable kernel analogue to byte measurements of
   the compiled Pallas/XLA programs (DESIGN.md §10).
+
+The declarative query surface over all of the above lives one package up:
+:mod:`repro.api` (DESIGN.md §11) — serializable ``Scenario`` objects and
+a batch planner that evaluates any (dataflow x workload x graph x
+hardware x composition) cross-product in one broadcast call per dataflow.
 """
 
 from . import registry

@@ -163,9 +163,23 @@ class FullGraphParams:
     E: ParamArray
     N: ParamArray
     T: ParamArray
-    high_degree_fraction: float = 0.1
+    high_degree_fraction: ParamArray = 0.1
+
+    def __post_init__(self) -> None:
+        for field in ("V", "E"):
+            val = _f64(getattr(self, field))
+            if not np.all(np.isfinite(val)):
+                raise ValueError(f"FullGraphParams.{field} must be finite, "
+                                 f"got {getattr(self, field)!r}")
+            if np.any(val < 0):
+                raise ValueError(
+                    f"FullGraphParams.{field} must be non-negative "
+                    f"(got {getattr(self, field)!r}); a negative graph size "
+                    "would silently produce a nonsense tile schedule")
 
     def replace(self, **kw) -> "FullGraphParams":
+        # dataclasses.replace re-runs __post_init__, so replaced values are
+        # validated exactly like constructor arguments.
         return dataclasses.replace(self, **kw)
 
 
@@ -189,6 +203,12 @@ class TiledGraphModel:
         else:
             spec = _resolve_spec(inner)
             self.inner = SpecModel(spec)
+        tv = _f64(tile_vertices)
+        if not np.all(np.isfinite(tv)) or np.any(tv < 1):
+            raise ValueError(
+                f"tile_vertices must be >= 1 (got {tile_vertices!r}): a tile "
+                "holds at least one vertex, and zero/negative capacities "
+                "silently produce nonsense schedules")
         self.tile_vertices = tile_vertices
         self.halo_dedup = float(halo_dedup)
         if self.halo_dedup < 1.0:

@@ -18,6 +18,8 @@ The two spmm dataflows declare runnable kernel analogues
 
 from __future__ import annotations
 
+from contextlib import contextmanager
+
 from .awb_gcn import AWB_GCN_SPEC
 from .dataflow import DataflowSpec, SpecModel
 from .engn import ENGN_SPEC
@@ -26,8 +28,8 @@ from .spmm_tiled import SPMM_TILED_SPEC
 from .spmm_unfused import SPMM_UNFUSED_SPEC
 from .terms import ModelOutput
 
-__all__ = ["register", "get", "names", "specs", "model", "evaluate",
-           "runnable_names"]
+__all__ = ["register", "unregister", "temporarily_registered", "get",
+           "names", "specs", "model", "evaluate", "runnable_names"]
 
 _REGISTRY: dict[str, DataflowSpec] = {}
 
@@ -41,6 +43,49 @@ def register(spec: DataflowSpec, *, overwrite: bool = False) -> DataflowSpec:
                          f"(pass overwrite=True to replace)")
     _REGISTRY[spec.name] = spec
     return spec
+
+
+def unregister(name: str) -> DataflowSpec:
+    """Remove and return a registered spec; KeyError if absent."""
+    try:
+        return _REGISTRY.pop(name)
+    except KeyError:
+        raise KeyError(f"cannot unregister unknown accelerator {name!r}; "
+                       f"registered: {names()}") from None
+
+
+@contextmanager
+def temporarily_registered(*specs: DataflowSpec, overwrite: bool = False):
+    """Register specs for the duration of a ``with`` block, then restore.
+
+    Lets tests and the scenario planner evaluate throwaway dataflows by
+    name without leaking global registry state across the suite.  Any spec
+    shadowed via ``overwrite=True`` is reinstated on exit; specs newly
+    added are removed even if the body already unregistered them.
+    """
+    shadowed: dict[str, DataflowSpec] = {}
+    added: list[str] = []
+    try:
+        for spec in specs:
+            # Record only the FIRST pre-existing occupant of a name (later
+            # same-name specs in this call are temporaries, not state to
+            # restore), and register inside the try so a failure mid-way
+            # still rolls back the specs already added.
+            if spec.name not in shadowed and spec.name not in added:
+                if spec.name in _REGISTRY:
+                    if not overwrite:
+                        raise ValueError(
+                            f"accelerator {spec.name!r} already registered "
+                            "(pass overwrite=True to shadow)")
+                    shadowed[spec.name] = _REGISTRY[spec.name]
+                else:
+                    added.append(spec.name)
+            register(spec, overwrite=overwrite)
+        yield tuple(specs)
+    finally:
+        for name in added:
+            _REGISTRY.pop(name, None)
+        _REGISTRY.update(shadowed)
 
 
 def get(name: str) -> DataflowSpec:

@@ -1,17 +1,22 @@
 """Parameter-sweep engine reproducing the paper's Figures 3-7 — and beyond.
 
-All closed forms in the registered dataflow specs broadcast, so a 2-D sweep
-is a single evaluation over ``np.meshgrid`` inputs — no Python loops.  Each
-``figN_*`` function mirrors one figure of the paper at its Sec. IV defaults
-(N=30, T=5, B=1000, sigma=4, P=10K) and returns a :class:`SweepResult` with
-labelled axes and a per-term breakdown grid.
+As of the scenario front-door redesign (DESIGN.md §11) every ``figN_*``
+function is a thin client of :mod:`repro.api`: it builds the figure's
+named scenario template (:mod:`repro.api.templates`), hands the batch to
+the planner (one broadcast closed-form call per dataflow — no Python loop
+per grid cell), and reshapes the stacked results onto the figure's grid.
+The outputs are bit-identical to the pre-redesign meshgrid evaluation
+(pinned in ``tests/test_registry.py``): the closed forms are elementwise
+float64 algebra, so stacking cells along a batch axis instead of a
+meshgrid cannot change a single bit.
 
-Accelerators are resolved by name through :mod:`repro.core.registry`;
-:func:`sweep_accelerators` broadcasts one parameter grid across *every*
-registered dataflow in a single vectorized evaluation per accelerator and
-stacks the results along a leading accelerator axis
-(:class:`AcceleratorSweepResult`) — the comparative study the paper's
-Sec. IV narrates, for any number of dataflows.
+Each ``figN_*`` mirrors one figure at its Sec. IV defaults (N=30, T=5,
+B=1000, sigma=4, P=10K) and returns a :class:`SweepResult` with labelled
+axes and a per-term breakdown grid.  :func:`sweep_accelerators` broadcasts
+one parameter grid across *every* registered dataflow — one evaluation per
+accelerator — and stacks the results along a leading accelerator axis
+(:class:`AcceleratorSweepResult`), the comparative study the paper's
+Sec. IV narrates for any number of dataflows.
 """
 
 from __future__ import annotations
@@ -21,10 +26,12 @@ from typing import Mapping, Sequence
 
 import numpy as np
 
+from repro.api import evaluate_groups, templates, tile_scenarios_from_graph
+
 from . import registry
 from .engn import EnGNModel
 from .notation import EnGNHardwareParams, GraphTileParams, paper_default_graph
-from .terms import CACHE_CLASSES, L1_CLASSES, L2_CLASSES
+from .terms import CACHE_CLASSES, L1_CLASSES, L2_CLASSES, ModelOutput
 
 __all__ = [
     "SweepResult",
@@ -40,9 +47,11 @@ __all__ = [
     "DEFAULT_B_SWEEP",
 ]
 
-DEFAULT_K_SWEEP = np.array([64, 128, 256, 512, 1024, 2048, 4096, 8192], dtype=np.float64)
-DEFAULT_M_SWEEP = np.array([4, 8, 16, 32, 64, 128, 256], dtype=np.float64)
-DEFAULT_B_SWEEP = np.logspace(1, 5, 33, dtype=np.float64)  # 10 .. 100k bits/iter
+# Canonical grids live with the templates; re-exported here for the
+# pre-redesign import surface.
+DEFAULT_K_SWEEP = templates.DEFAULT_K_SWEEP
+DEFAULT_M_SWEEP = templates.DEFAULT_M_SWEEP
+DEFAULT_B_SWEEP = templates.DEFAULT_B_SWEEP
 
 
 def _flatten_columns(axes: Mapping[str, np.ndarray],
@@ -126,8 +135,31 @@ class AcceleratorSweepResult:
         return out
 
 
-def _grid(*axes: np.ndarray) -> tuple[np.ndarray, ...]:
-    return tuple(np.meshgrid(*axes, indexing="ij"))
+def _sweep_result_from_template(tb: "templates.TemplateBatch",
+                                **extra_meta) -> SweepResult:
+    """Evaluate a figure template and reshape the stacked output to its grid.
+
+    A figure template is one plan group (one dataflow, one override-key
+    set), so the planner performs exactly one broadcast evaluation; each
+    movement term's batch column C-reshapes onto the meshgrid ``ij`` grid.
+    (`evaluate_groups` is the materialization-free planner path — the
+    figure only needs the stacked group output, not per-cell results.)
+    """
+    (group,) = evaluate_groups(tb.scenarios)
+    out = group.output
+    shape = tb.grid_shape
+    n = len(tb.scenarios)
+
+    def grid(arr) -> np.ndarray:
+        return np.broadcast_to(np.asarray(arr, np.float64), (n,)).reshape(shape)
+
+    return SweepResult(
+        figure=tb.figure,
+        axes={k: np.asarray(v, np.float64) for k, v in tb.axes.items()},
+        data_bits={t.name: grid(t.data_bits) for t in out.terms},
+        iterations={t.name: grid(t.iterations) for t in out.terms},
+        meta={**dict(tb.meta), **extra_meta},
+    )
 
 
 def sweep_accelerators(
@@ -140,8 +172,9 @@ def sweep_accelerators(
 ) -> AcceleratorSweepResult:
     """Evaluate every (registered) accelerator over one grid, stacked.
 
-    Each dataflow is evaluated **once** on the whole array-valued grid at
-    its default hardware parameters; the per-accelerator totals are then
+    The grid flattens to a scenario batch (one scenario per accelerator
+    per cell) and the planner evaluates each dataflow **once** on the
+    whole stacked batch; the per-accelerator totals are then reshaped and
     ``np.stack``-ed along a leading accelerator axis.  Pass ``graph`` to
     sweep a custom array-valued tile instead of the Sec. IV defaults; when
     exactly one graph field is array-valued the sweep axis is inferred,
@@ -168,10 +201,21 @@ def sweep_accelerators(
     if grid_shape != shape:
         raise ValueError(f"axes grid shape {grid_shape} does not match the "
                          f"graph broadcast shape {shape}")
-    outputs = [registry.evaluate(name, g) for name in names]
+    # dict.fromkeys: dedupe while preserving order — a repeated name costs
+    # one evaluation and reuses the stacked output for every occurrence.
+    scenarios = [s for name in dict.fromkeys(names)
+                 for s in tile_scenarios_from_graph(name, g, shape)]
+    groups = evaluate_groups(scenarios)
+    outputs: dict[str, ModelOutput] = {grp.dataflow: grp.output
+                                       for grp in groups}
+    assert len(groups) == len(set(names)), "one broadcast call per dataflow"
+    n = int(np.prod(shape)) if shape else 1
 
     def stack(fn):
-        return np.stack([np.broadcast_to(fn(o), shape) for o in outputs])
+        return np.stack([
+            np.broadcast_to(np.asarray(fn(outputs[name]), np.float64),
+                            (n,)).reshape(shape)
+            for name in names])
 
     return AcceleratorSweepResult(
         figure=figure,
@@ -185,7 +229,8 @@ def sweep_accelerators(
             "cache": stack(lambda o: o.total_bits(CACHE_CLASSES)),
             "onchip": stack(lambda o: o.total_bits(L1_CLASSES)),
         },
-        meta={"outputs": tuple(outputs)},
+        meta={"outputs": tuple(outputs[name] for name in names),
+              "n_evaluations": len(groups)},
     )
 
 
@@ -197,17 +242,7 @@ def fig3_engn_movement(
 
     The paper plots M = M' ("for the sake of clarity"); we sweep both equal.
     """
-    Kg, Mg = _grid(np.asarray(K, np.float64), np.asarray(M, np.float64))
-    graph = paper_default_graph(Kg)
-    hw = EnGNHardwareParams(M=Mg, M_prime=Mg)
-    out = registry.evaluate("engn", graph, hw)
-    return SweepResult(
-        figure="fig3",
-        axes={"K": np.asarray(K, np.float64), "M": np.asarray(M, np.float64)},
-        data_bits=out.breakdown(),
-        iterations=out.iteration_breakdown(),
-        meta={"model": "engn"},
-    )
+    return _sweep_result_from_template(templates.fig3(K=K, M=M))
 
 
 def fig4_hygcn_movement(
@@ -215,17 +250,7 @@ def fig4_hygcn_movement(
     Ma: np.ndarray = DEFAULT_M_SWEEP,
 ) -> SweepResult:
     """Fig. 4: HyGCN per-level data movement across tile size and SIMD cores."""
-    Kg, Mag = _grid(np.asarray(K, np.float64), np.asarray(Ma, np.float64))
-    graph = paper_default_graph(Kg)
-    spec = registry.get("hygcn")
-    out = spec.evaluate(graph, spec.hw_factory().replace(Ma=Mag))
-    return SweepResult(
-        figure="fig4",
-        axes={"K": np.asarray(K, np.float64), "Ma": np.asarray(Ma, np.float64)},
-        data_bits=out.breakdown(),
-        iterations=out.iteration_breakdown(),
-        meta={"model": "hygcn"},
-    )
+    return _sweep_result_from_template(templates.fig4(K=K, Ma=Ma))
 
 
 def fig5_iterations_vs_bandwidth(
@@ -238,19 +263,7 @@ def fig5_iterations_vs_bandwidth(
     Any registered accelerator works — every hardware record has a ``B``
     (L2 bandwidth) field to sweep.
     """
-    Bg, Kg = _grid(np.asarray(B, np.float64), np.asarray(K, np.float64))
-    graph = paper_default_graph(Kg)
-    spec = registry.get(accelerator)
-    out = spec.evaluate(graph, spec.hw_factory().replace(B=Bg))
-    figure = {"engn": "fig5a", "hygcn": "fig5b"}.get(accelerator,
-                                                     f"fig5_{accelerator}")
-    return SweepResult(
-        figure=figure,
-        axes={"B": np.asarray(B, np.float64), "K": np.asarray(K, np.float64)},
-        data_bits=out.breakdown(),
-        iterations=out.iteration_breakdown(),
-        meta={"model": accelerator},
-    )
+    return _sweep_result_from_template(templates.fig5(accelerator, B=B, K=K))
 
 
 def fig6_fitting_factor(
@@ -259,18 +272,10 @@ def fig6_fitting_factor(
 ) -> SweepResult:
     """Fig. 6: EnGN iterations vs the array-fitting factor K*N / M^2."""
     M = np.asarray(M, np.float64)
-    graph = paper_default_graph(K)
-    hw = EnGNHardwareParams(M=M, M_prime=M)
-    model = EnGNModel()
-    out = model.evaluate(graph, hw)
-    ff = model.fitting_factor(graph, hw)
-    return SweepResult(
-        figure="fig6",
-        axes={"M": M},
-        data_bits=out.breakdown(),
-        iterations=out.iteration_breakdown(),
-        meta={"model": "engn", "fitting_factor": ff, "K": K},
-    )
+    ff = EnGNModel().fitting_factor(paper_default_graph(K),
+                                    EnGNHardwareParams(M=M, M_prime=M))
+    return _sweep_result_from_template(templates.fig6(K=K, M=M),
+                                       fitting_factor=ff)
 
 
 def fig7_systolic_reuse(
@@ -278,14 +283,4 @@ def fig7_systolic_reuse(
     N: np.ndarray = np.array([30, 128, 512], dtype=np.float64),
 ) -> SweepResult:
     """Fig. 7: HyGCN loadweights movement vs systolic reuse Gamma and depth N."""
-    Gg, Ng = _grid(np.asarray(gamma, np.float64), np.asarray(N, np.float64))
-    graph = paper_default_graph(1024.0).replace(N=Ng)
-    spec = registry.get("hygcn")
-    out = spec.evaluate(graph, spec.hw_factory().replace(gamma=Gg))
-    return SweepResult(
-        figure="fig7",
-        axes={"gamma": np.asarray(gamma, np.float64), "N": np.asarray(N, np.float64)},
-        data_bits=out.breakdown(),
-        iterations=out.iteration_breakdown(),
-        meta={"model": "hygcn"},
-    )
+    return _sweep_result_from_template(templates.fig7(gamma=gamma, N=N))

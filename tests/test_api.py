@@ -1,0 +1,429 @@
+"""Scenario front-door tests (DESIGN.md §11).
+
+Load-bearing guarantees:
+
+* a Scenario is pure data: JSON round trips reproduce the evaluation
+  **bit-identically** for every registered dataflow and both composition
+  policies;
+* the batch planner's stacked broadcast evaluation equals the
+  per-scenario loop exactly (same float64 bits), while performing at most
+  one broadcast evaluation per distinct dataflow for homogeneous batches
+  (and exactly one per figure template);
+* the workload configs' §5 tile-language bridges evaluate end-to-end
+  across every registered dataflow;
+* registry scratch registration (`temporarily_registered`) and the
+  compose-layer input validation satellites behave.
+"""
+
+import dataclasses
+import json
+
+import numpy as np
+import pytest
+
+from repro.api import (Composition, Scenario, dump_scenarios,
+                       evaluate_scenario, evaluate_scenarios, load_scenarios,
+                       template, template_names)
+from repro.api.cli import main as cli_main
+from repro.core import registry
+from repro.core.compose import FullGraphParams, TiledGraphModel
+from repro.core.validation import SEC4_GOLDEN_TOTALS
+
+ALL_DATAFLOWS = registry.names()
+
+
+def _policy_scenarios(dataflow: str) -> dict[str, Scenario]:
+    """One scenario per structural shape the planner distinguishes."""
+    return {
+        "tile": Scenario.tile(dataflow, K=512.0),
+        "tile_hw": Scenario.tile(dataflow, K=768.0, hardware={"B": 2000.0}),
+        "ml_spill": Scenario.tile(
+            dataflow, K=512.0, N=64.0, T=4.0,
+            composition={"widths": [64, 16, 4], "residency": "spill"}),
+        "ml_resident": Scenario.tile(
+            dataflow, K=512.0, N=64.0, T=4.0,
+            composition={"widths": [64, 16, 4], "residency": "resident"}),
+        "tiled_spill": Scenario.full_graph(
+            dataflow, V=2708.0, E=10556.0, N=1433.0, T=7.0,
+            tile_vertices=512.0, widths=[1433, 16, 7], residency="spill"),
+        "tiled_resident": Scenario.full_graph(
+            dataflow, V=2708.0, E=10556.0, N=1433.0, T=7.0,
+            tile_vertices=512.0, widths=[1433, 16, 7], residency="resident"),
+    }
+
+
+# ---------------------------------------------------------------------------
+# JSON round trips: Scenario -> to_json -> from_json -> evaluate, bit for bit.
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("name", ALL_DATAFLOWS)
+def test_scenario_json_round_trip_bit_identical(name):
+    for policy, s in _policy_scenarios(name).items():
+        s2 = Scenario.from_json(s.to_json())
+        assert s2 == s, policy
+        r1, r2 = evaluate_scenario(s), evaluate_scenario(s2)
+        assert r1.total_bits == r2.total_bits, policy
+        assert r1.total_iterations == r2.total_iterations, policy
+        assert r1.breakdown == r2.breakdown, policy
+        assert r1.iteration_breakdown == r2.iteration_breakdown, policy
+
+
+def test_scenario_file_round_trip(tmp_path):
+    batch = [s for name in ALL_DATAFLOWS
+             for s in _policy_scenarios(name).values()]
+    path = tmp_path / "batch.json"
+    dump_scenarios(batch, str(path))
+    loaded = load_scenarios(str(path))
+    assert loaded == batch
+    # a bare JSON list loads too
+    bare = tmp_path / "bare.json"
+    bare.write_text(json.dumps([s.to_dict() for s in batch]))
+    assert load_scenarios(str(bare)) == batch
+
+
+# ---------------------------------------------------------------------------
+# Batch planner: stacked broadcast == per-scenario loop, exactly.
+# ---------------------------------------------------------------------------
+def test_batch_equals_per_scenario_loop_exactly():
+    rng = np.random.default_rng(7)
+    batch = []
+    for name in ALL_DATAFLOWS:
+        for K in rng.integers(64, 4096, size=3):
+            batch.append(Scenario.tile(name, K=float(K)))
+            batch.append(Scenario.tile(name, K=float(K),
+                                       hardware={"B": float(rng.integers(100, 9999))}))
+            batch.append(Scenario.full_graph(
+                name, V=float(K * 4), E=float(K * 40), N=96.0, T=8.0,
+                tile_vertices=float(K), widths=[96, 32, 8],
+                residency="resident"))
+    res = evaluate_scenarios(batch)
+    assert len(res.results) == len(batch)
+    for s, r in zip(batch, res.results):
+        assert r.scenario is s
+        lone = evaluate_scenario(s)
+        assert r.total_bits == lone.total_bits
+        assert r.total_iterations == lone.total_iterations
+        assert r.breakdown == lone.breakdown
+        assert r.iteration_breakdown == lone.iteration_breakdown
+        assert r.n_tiles == lone.n_tiles
+
+
+def test_one_broadcast_evaluation_per_dataflow_homogeneous():
+    """The acceptance property: a batch of structurally-uniform scenarios
+    costs at most one broadcast evaluation per distinct dataflow."""
+    tb = template("comparison")
+    res = evaluate_scenarios(tb.scenarios)
+    assert res.n_evaluations == len(ALL_DATAFLOWS)
+    assert set(res.evaluations_per_dataflow().values()) == {1}
+    # ... and the full-graph composition template likewise.
+    tb = template("cora_end_to_end")
+    res = evaluate_scenarios(tb.scenarios)
+    assert res.n_evaluations == len(ALL_DATAFLOWS)
+    assert set(res.evaluations_per_dataflow().values()) == {1}
+
+
+@pytest.mark.parametrize("name", sorted(template_names()))
+def test_figure_templates_are_single_plan_groups(name):
+    tb = template(name)
+    res = evaluate_scenarios(tb.scenarios)
+    n_dataflows = len({s.dataflow for s in tb.scenarios})
+    assert res.n_evaluations == n_dataflows
+    assert len(res.results) == len(tb.scenarios)
+
+
+def test_comparison_template_matches_sec4_goldens():
+    tb = template("comparison", K=np.array([1024.0]))
+    res = evaluate_scenarios(tb.scenarios)
+    for r in res.results:
+        bits, iters = SEC4_GOLDEN_TOTALS[r.scenario.dataflow]
+        assert r.total_bits == bits
+        assert r.total_iterations == iters
+
+
+def test_expect_pins_gate_golden_drift():
+    good = Scenario.tile("engn", expect={
+        "total_bits": SEC4_GOLDEN_TOTALS["engn"][0],
+        "total_iterations": SEC4_GOLDEN_TOTALS["engn"][1]})
+    bad = Scenario.tile("engn", expect={"total_bits": 123.0})
+    res = evaluate_scenarios([good, bad])
+    assert res.results[0].expect_ok is True
+    assert res.results[1].expect_ok is False
+    assert len(res.expect_failures()) == 1
+    assert evaluate_scenario(Scenario.tile("engn")).expect_ok is None
+
+
+# ---------------------------------------------------------------------------
+# Scenario schema validation.
+# ---------------------------------------------------------------------------
+def test_scenario_schema_rejections():
+    with pytest.raises(ValueError, match="tile_vertices"):
+        Scenario(dataflow="engn",
+                 graph={"V": 100, "E": 1000, "N": 30, "T": 5})
+    with pytest.raises(ValueError, match="full-graph"):
+        Scenario.tile("engn", composition={"tile_vertices": 256})
+    with pytest.raises(ValueError, match="exactly"):
+        Scenario(dataflow="engn", graph={"K": 1024})
+    with pytest.raises(ValueError, match="unknown full-graph keys"):
+        Scenario(dataflow="engn",
+                 graph={"V": 1, "E": 1, "N": 1, "T": 1, "Z": 9},
+                 composition={"tile_vertices": 64})
+    with pytest.raises(ValueError, match="widths"):
+        Composition(widths=[30])
+    with pytest.raises(ValueError, match="residency"):
+        Composition(widths=[30, 5], residency="sometimes")
+    with pytest.raises(ValueError, match="empty Composition"):
+        Composition()
+    with pytest.raises(ValueError, match="halo_dedup"):
+        Composition(tile_vertices=64, halo_dedup=0.5)
+    with pytest.raises(ValueError, match="tile_vertices"):
+        Composition(tile_vertices=0)
+    with pytest.raises(TypeError, match="pure"):
+        Scenario.tile("engn", K="1024")
+    with pytest.raises(TypeError, match="pure"):
+        Scenario.tile("engn", hardware={"B": np.array([1.0, 2.0])})
+    with pytest.raises(ValueError, match="finite"):
+        Scenario.tile("engn", P=float("inf"))
+    with pytest.raises(ValueError, match="expect"):
+        Scenario.tile("engn", expect={"offchip": 1.0})
+    with pytest.raises(ValueError, match="unknown Scenario keys"):
+        Scenario.from_dict({"dataflow": "engn", "graph": {}, "bogus": 1})
+
+
+def test_unknown_hardware_override_is_rejected_with_fields():
+    s = Scenario.tile("engn", hardware={"warp_size": 32.0})
+    with pytest.raises(ValueError, match="warp_size"):
+        evaluate_scenario(s)
+    with pytest.raises(KeyError, match="registered"):
+        evaluate_scenario(Scenario.tile("not_a_dataflow"))
+
+
+# ---------------------------------------------------------------------------
+# Workload bridges: §5 tile language end-to-end across all dataflows.
+# ---------------------------------------------------------------------------
+WORKLOADS = ("smollm-135m", "gemma2-2b", "equiformer-v2", "dlrm-mlperf")
+
+
+@pytest.mark.parametrize("arch_name", WORKLOADS)
+def test_workload_bridge_evaluates_across_all_dataflows(arch_name):
+    configs = pytest.importorskip("repro.configs")
+    arch = configs.get_arch(arch_name)
+    scenarios = arch.to_scenarios()
+    assert {s.dataflow for s in scenarios} == set(ALL_DATAFLOWS)
+    res = evaluate_scenarios(scenarios)
+    # one broadcast evaluation per dataflow: shapes batch within an arch.
+    assert res.n_evaluations == len(ALL_DATAFLOWS)
+    for r in res.results:
+        assert np.isfinite(r.total_bits) and r.total_bits > 0
+        assert np.isfinite(r.total_iterations) and r.total_iterations > 0
+        assert r.scenario.workload.startswith(arch_name)
+
+
+def test_workload_bridge_tile_language_mappings():
+    configs = pytest.importorskip("repro.configs")
+    # gemma2: the 4k sliding window bounds the banded-graph neighborhood.
+    (s,) = configs.get_arch("gemma2-2b").to_scenarios(
+        shapes=("prefill_32k",), dataflows=("engn",))
+    assert s.graph["K"] == 32768.0
+    assert s.graph["P"] == 32768.0 * 4096.0
+    assert s.composition.widths == (2304.0,) * 27
+    # smollm: full causal attention -> W = seq.
+    (s,) = configs.get_arch("smollm-135m").to_scenarios(
+        shapes=("train_4k",), dataflows=("engn",))
+    assert s.graph["P"] == 4096.0 * 4096.0
+    # equiformer: irreps flatten to (l_max+1)^2 * C.
+    (s,) = configs.get_arch("equiformer-v2").to_scenarios(
+        shapes=("ogb_products",), dataflows=("engn",))
+    assert s.composition.widths[1] == (6 + 1) ** 2 * 128
+    assert s.graph["V"] == 2449029.0 and s.graph["E"] == 61859140.0
+    # dlrm: embedding gather as aggregation.
+    (s,) = configs.get_arch("dlrm-mlperf").to_scenarios(
+        shapes=("serve_p99",), dataflows=("engn",))
+    assert s.graph["K"] == 512.0
+    assert s.graph["P"] == 512.0 * 26
+    assert s.graph["N"] == 128.0 and s.graph["T"] == 1.0
+
+
+# ---------------------------------------------------------------------------
+# Satellite: registry scratch registration.
+# ---------------------------------------------------------------------------
+def test_registry_unregister_round_trip():
+    spec = registry.unregister("awb_gcn")
+    try:
+        assert "awb_gcn" not in registry.names()
+        with pytest.raises(KeyError, match="unregister unknown"):
+            registry.unregister("awb_gcn")
+    finally:
+        registry.register(spec)
+    assert "awb_gcn" in registry.names()
+
+
+def test_temporarily_registered_scratch_spec():
+    scratch = dataclasses.replace(registry.get("engn"), name="engn_scratch")
+    before = registry.names()
+    with registry.temporarily_registered(scratch):
+        assert "engn_scratch" in registry.names()
+        r = evaluate_scenario(Scenario.tile("engn_scratch"))
+        assert r.total_bits == SEC4_GOLDEN_TOTALS["engn"][0]
+    assert registry.names() == before
+
+    # shadowing an existing name requires overwrite=True and restores it.
+    shadow = dataclasses.replace(registry.get("hygcn"), name="engn")
+    with pytest.raises(ValueError, match="already registered"):
+        with registry.temporarily_registered(shadow):
+            pass
+    with registry.temporarily_registered(shadow, overwrite=True):
+        assert registry.get("engn") is shadow
+    assert registry.get("engn") is not shadow
+    assert registry.names() == before
+
+    # cleanup happens even when the body raises.
+    with pytest.raises(RuntimeError):
+        with registry.temporarily_registered(scratch):
+            raise RuntimeError("boom")
+    assert registry.names() == before
+
+    # ... and when a LATER spec in the same call fails to register: specs
+    # already added must roll back, not leak.
+    colliding = dataclasses.replace(registry.get("hygcn"), name="engn")
+    with pytest.raises(ValueError, match="already registered"):
+        with registry.temporarily_registered(scratch, colliding):
+            pass
+    assert registry.names() == before
+
+    # two temporaries sharing a name under overwrite restore the ORIGINAL
+    # spec, not the first temporary.
+    orig = registry.get("engn")
+    t1 = dataclasses.replace(orig, name="engn", description="t1")
+    t2 = dataclasses.replace(orig, name="engn", description="t2")
+    with registry.temporarily_registered(t1, t2, overwrite=True):
+        assert registry.get("engn") is t2
+    assert registry.get("engn") is orig
+
+
+def test_composition_round_trip_preserves_non_default_fields():
+    """Every meaningful non-default field survives serialization: round
+    trips are value-identical, so equal scenarios share one plan group."""
+    s = Scenario.full_graph("engn", V=100.0, E=500.0, N=8.0, T=4.0,
+                            widths=[8, 4], residency="resident",
+                            halo_dedup=2.0)
+    s2 = Scenario.from_json(s.to_json())
+    assert s2 == s and s2.plan_key() == s.plan_key()
+    assert s2.composition.residency == "resident"
+    assert s2.composition.halo_dedup == 2.0
+    res = evaluate_scenarios([s, s2])
+    assert res.n_evaluations == 1
+
+
+def test_composition_rejects_ineffective_knobs():
+    """residency without widths / halo_dedup without tiling would be
+    silently ignored (and would split plan groups): rejected instead."""
+    with pytest.raises(ValueError, match="residency.*no\\s+effect"):
+        Scenario.full_graph("engn", V=100.0, E=500.0, N=8.0, T=4.0,
+                            residency="resident")
+    with pytest.raises(ValueError, match="halo_dedup.*no\\s+effect"):
+        Composition(widths=[64, 16], halo_dedup=4.0)
+
+
+def test_sweep_accelerators_tolerates_duplicate_names():
+    from repro.core.sweep import sweep_accelerators
+    K = np.array([256.0, 1024.0])
+    dup = sweep_accelerators(("engn", "engn", "hygcn"), K=K)
+    ref = sweep_accelerators(("engn", "hygcn"), K=K)
+    assert dup.accelerators == ("engn", "engn", "hygcn")
+    assert dup.meta["n_evaluations"] == 2
+    np.testing.assert_array_equal(dup.total_bits[0], dup.total_bits[1])
+    np.testing.assert_array_equal(dup.total_bits[0], ref.total_bits[0])
+    np.testing.assert_array_equal(dup.total_bits[2], ref.total_bits[1])
+
+
+def test_trusted_template_scenarios_equal_validated_construction():
+    """The templates' fast-path cells must be indistinguishable from
+    publicly constructed scenarios (equality, hash, round trip)."""
+    tb = template("fig3")
+    s = tb.scenarios[0]
+    public = Scenario(dataflow=s.dataflow, graph=dict(s.graph),
+                      hardware=dict(s.hardware))
+    assert s == public and hash(s) == hash(public)
+    assert Scenario.from_json(s.to_json()) == s
+    assert s.graph_kind == "tile" and s.plan_key() == public.plan_key()
+
+
+def test_scenario_is_hashable_value_object():
+    a, b = Scenario.tile("engn"), Scenario.tile("engn")
+    c = Scenario.full_graph("engn", V=10, E=20, N=3, T=2, widths=[3, 2],
+                            expect={"total_bits": 1.0})
+    assert a == b and hash(a) == hash(b)
+    assert {a, b, c} == {a, c}
+
+
+# ---------------------------------------------------------------------------
+# Satellite: compose-layer input validation.
+# ---------------------------------------------------------------------------
+def test_full_graph_params_validation():
+    with pytest.raises(ValueError, match="non-negative"):
+        FullGraphParams(V=-1, E=10, N=30, T=5)
+    with pytest.raises(ValueError, match="non-negative"):
+        FullGraphParams(V=10, E=np.array([5.0, -2.0]), N=30, T=5)
+    with pytest.raises(ValueError, match="finite"):
+        FullGraphParams(V=float("nan"), E=10, N=30, T=5)
+    good = FullGraphParams(V=10, E=10, N=30, T=5)
+    with pytest.raises(ValueError, match="non-negative"):
+        good.replace(E=-5)
+    assert good.replace(E=7).E == 7
+
+
+def test_tiled_graph_model_tile_vertices_validation():
+    for bad in (0, -4, 0.5, float("nan"), np.array([1024.0, 0.0])):
+        with pytest.raises(ValueError, match="tile_vertices"):
+            TiledGraphModel("engn", tile_vertices=bad)
+    TiledGraphModel("engn", tile_vertices=1)  # boundary is legal
+
+
+# ---------------------------------------------------------------------------
+# CLI (the service-shaped front door).
+# ---------------------------------------------------------------------------
+def test_cli_comparison_batch(tmp_path, capsys):
+    out = tmp_path / "BENCH_scenarios.json"
+    # strip the conformance flag: kernel compilation is test_conformance's
+    # job, and the CLI exercises the same planner path without it.
+    scens = [s.replace(conformance=False)
+             for s in load_scenarios("examples/scenarios/comparison.json")]
+    batch_path = tmp_path / "comparison.json"
+    dump_scenarios(scens, str(batch_path))
+    rc = cli_main(["--scenario", str(batch_path), "--json", str(out)])
+    assert rc == 0
+    payload = json.loads(out.read_text())
+    assert payload["status"] == "ok"
+    assert payload["n_scenarios"] == len(scens)
+    assert all(r.get("expect_ok", True) for r in payload["results"])
+    assert "broadcast" in capsys.readouterr().out
+
+
+def test_cli_exits_nonzero_on_golden_drift(tmp_path):
+    drift = [Scenario.tile("engn", expect={"total_bits": 1.0})]
+    path = tmp_path / "drift.json"
+    dump_scenarios(drift, str(path))
+    assert cli_main(["--scenario", str(path)]) == 1
+
+
+def test_cli_usage_errors(tmp_path, capsys):
+    assert cli_main([]) == 2
+    # filters that only apply to --workload must not be silently dropped.
+    assert cli_main(["--template", "fig6", "--dataflows", "engn"]) == 2
+    assert cli_main(["--template", "fig6", "--shape", "train_4k"]) == 2
+    bad = tmp_path / "bad.json"
+    bad.write_text('{"scenarios": [{"dataflow": "engn"}]}')
+    assert cli_main(["--scenario", str(bad)]) == 2
+    assert cli_main(["--list"]) == 0
+    capsys.readouterr()
+
+
+def test_cli_template_and_workload_sources(tmp_path):
+    out = tmp_path / "t.json"
+    assert cli_main(["--template", "fig6", "--json", str(out)]) == 0
+    assert json.loads(out.read_text())["n_evaluations"] == 1
+    pytest.importorskip("repro.configs")
+    assert cli_main(["--workload", "gcn-cora", "--shape", "molecule",
+                     "--dataflows", "engn,awb_gcn", "--json", str(out)]) == 0
+    payload = json.loads(out.read_text())
+    assert payload["n_scenarios"] == 2
+    assert payload["n_evaluations"] == 2
