@@ -24,16 +24,17 @@ registered dataflows.
 from .planner import (BatchResult, GroupResult, ScenarioResult,
                       evaluate_groups, evaluate_scenario, evaluate_scenarios)
 from .scenario import (Composition, FULL_GRAPH_FIELDS, Scenario,
-                       TILE_GRAPH_FIELDS, dump_scenarios, load_scenarios,
-                       scenarios_to_dicts)
+                       TILE_GRAPH_FIELDS, TRACE_GRAPH_FIELDS, dump_scenarios,
+                       load_scenarios, scenarios_to_dicts)
 from .templates import (TEMPLATES, TemplateBatch, template, template_names,
-                        tile_scenarios_from_graph)
+                        tile_scenarios_from_graph, trace_scenarios_from_graph)
 
 __all__ = [
     "Scenario",
     "Composition",
     "TILE_GRAPH_FIELDS",
     "FULL_GRAPH_FIELDS",
+    "TRACE_GRAPH_FIELDS",
     "load_scenarios",
     "dump_scenarios",
     "scenarios_to_dicts",
@@ -48,4 +49,5 @@ __all__ = [
     "template",
     "template_names",
     "tile_scenarios_from_graph",
+    "trace_scenarios_from_graph",
 ]

@@ -44,6 +44,11 @@ def _print_listing() -> None:
     print("\nscenario templates (--template NAME):")
     for name in template_names():
         print(f"  {name}")
+    from repro.core.trace import trace_dataset_names
+
+    print("\ntrace datasets ({'kind': 'trace', 'dataset': NAME, ...}):")
+    for name in trace_dataset_names():
+        print(f"  {name}")
     try:
         from repro.configs import all_archs
     except Exception as exc:  # pragma: no cover - configs need jax

@@ -26,6 +26,7 @@ from repro.core import registry
 from repro.core.compose import FullGraphParams, MultiLayerModel, TiledGraphModel
 from repro.core.notation import GraphTileParams
 from repro.core.terms import ModelOutput
+from repro.core.trace import resolve_trace_dataset
 
 from .scenario import Scenario, TILE_GRAPH_FIELDS
 
@@ -183,8 +184,13 @@ def _group_hw(spec, scenarios: Sequence[Scenario]):
                          for k in keys})
 
 
-def _group_model(spec, scenarios: Sequence[Scenario]):
-    """The (possibly composed) model shared by one plan group."""
+def _group_model(spec, scenarios: Sequence[Scenario], trace=None):
+    """The (possibly composed) model shared by one plan group.
+
+    ``trace`` (resolved once per group) switches the tiled model onto the
+    exact edge-list schedule; its tile capacity is structural (part of the
+    plan key), so it is taken as a scalar, not stacked.
+    """
     comp = scenarios[0].composition
     if comp is None:
         return spec
@@ -195,6 +201,9 @@ def _group_model(spec, scenarios: Sequence[Scenario]):
             for i in range(len(comp.widths)))
         inner = MultiLayerModel(spec, widths, residency=comp.residency)
     if comp.tile_vertices is not None:
+        if trace is not None:
+            return TiledGraphModel(inner, tile_vertices=comp.tile_vertices,
+                                   trace=trace)
         return TiledGraphModel(
             inner,
             tile_vertices=_stack(s.composition.tile_vertices
@@ -203,12 +212,23 @@ def _group_model(spec, scenarios: Sequence[Scenario]):
     return inner
 
 
-def _group_graph(scenarios: Sequence[Scenario]):
+def _group_graph(scenarios: Sequence[Scenario], trace=None):
     kind = scenarios[0].graph_kind
     if kind == "tile":
         return GraphTileParams(**{
             f: _stack(s.graph[f] for s in scenarios)
             for f in TILE_GRAPH_FIELDS})
+    if kind == "trace":
+        # V/E are properties of the resolved edge list (shared across the
+        # group: the dataset reference is part of the plan key).
+        return FullGraphParams(
+            V=float(trace.n_nodes),
+            E=float(trace.n_edges),
+            N=_stack(s.graph["N"] for s in scenarios),
+            T=_stack(s.graph["T"] for s in scenarios),
+            high_degree_fraction=_stack(s.graph["high_degree_fraction"]
+                                        for s in scenarios),
+        )
     return FullGraphParams(
         V=_stack(s.graph["V"] for s in scenarios),
         E=_stack(s.graph["E"] for s in scenarios),
@@ -220,9 +240,14 @@ def _group_graph(scenarios: Sequence[Scenario]):
 
 
 def _evaluate_group(scenarios: Sequence[Scenario]) -> ModelOutput:
-    spec = registry.get(scenarios[0].dataflow)
-    model = _group_model(spec, scenarios)
-    graph = _group_graph(scenarios)
+    first = scenarios[0]
+    spec = registry.get(first.dataflow)
+    trace = None
+    if first.graph_kind == "trace":
+        trace = resolve_trace_dataset(first.graph["dataset"],
+                                      first.graph["params"])
+    model = _group_model(spec, scenarios, trace=trace)
+    graph = _group_graph(scenarios, trace=trace)
     hw = _group_hw(spec, scenarios)
     # THE one broadcast closed-form call for this group.
     return model.evaluate(graph, hw)

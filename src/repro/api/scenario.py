@@ -17,6 +17,13 @@ Graph kinds
 ``full``  — a whole graph ``V, E, N, T`` (plus ``high_degree_fraction``),
             evaluated through the §7 composition layer; requires a
             :class:`Composition` with ``tile_vertices``.
+``trace`` — an *actual* graph: ``{"kind": "trace", "dataset": name,
+            "params": {...}, "N": ..., "T": ...}`` references a registered
+            deterministic trace dataset (:mod:`repro.core.trace`), and the
+            §12 exact edge-list schedule replaces the uniform-tile
+            approximation.  Requires ``tile_vertices`` (scalar per plan
+            group) and forbids ``halo_dedup != 1`` — the trace measures
+            the dedup exactly.
 
 A scenario's ``composition`` adds the §7 layers on top of the dataflow:
 ``widths`` chains an L-layer :class:`~repro.core.compose.MultiLayerModel`
@@ -44,6 +51,7 @@ __all__ = [
     "Scenario",
     "TILE_GRAPH_FIELDS",
     "FULL_GRAPH_FIELDS",
+    "TRACE_GRAPH_FIELDS",
     "load_scenarios",
     "dump_scenarios",
     "scenarios_to_dicts",
@@ -53,6 +61,8 @@ __all__ = [
 TILE_GRAPH_FIELDS = ("N", "T", "K", "L", "P")
 #: Full-graph (composition-layer) parameters; high_degree_fraction optional.
 FULL_GRAPH_FIELDS = ("V", "E", "N", "T")
+#: Trace-graph required fields; ``params`` / ``high_degree_fraction`` optional.
+TRACE_GRAPH_FIELDS = ("dataset", "N", "T")
 
 _RESIDENCIES = ("spill", "resident")
 
@@ -64,6 +74,23 @@ def _require_number(value: Any, what: str) -> float:
     out = float(value)
     if not math.isfinite(out):
         raise ValueError(f"{what} must be finite, got {value!r}")
+    return out
+
+
+def _require_nonneg(value: Any, what: str) -> float:
+    out = _require_number(value, what)
+    if out < 0:
+        raise ValueError(f"{what} must be non-negative, got {value!r}: a "
+                         "negative graph quantity silently produces "
+                         "negative movement totals")
+    return out
+
+
+def _require_fraction(value: Any, what: str) -> float:
+    out = _require_nonneg(value, what)
+    if out > 1.0:
+        raise ValueError(f"{what} is a fraction of the tile's vertices and "
+                         f"must be <= 1, got {value!r}")
     return out
 
 
@@ -170,8 +197,49 @@ class Composition:
         )
 
 
+def _normalized_trace_graph(graph: Mapping[str, Any]) -> dict:
+    keys = set(graph)
+    missing = set(TRACE_GRAPH_FIELDS) - keys
+    if missing:
+        raise ValueError(f"trace scenario is missing {sorted(missing)}; "
+                         f"required: {TRACE_GRAPH_FIELDS} "
+                         "(plus optional params / high_degree_fraction)")
+    allowed = set(TRACE_GRAPH_FIELDS) | {"kind", "params",
+                                         "high_degree_fraction"}
+    extra = keys - allowed
+    if extra:
+        raise ValueError(f"unknown trace-graph keys {sorted(extra)}; "
+                         f"allowed: {sorted(allowed)}")
+    dataset = graph["dataset"]
+    if not isinstance(dataset, str) or not dataset:
+        raise ValueError(f"graph.dataset must be a non-empty registered "
+                         f"trace-dataset name, got {dataset!r}")
+    params = graph.get("params", {})
+    if not isinstance(params, Mapping):
+        raise ValueError(f"graph.params must be a mapping of numeric "
+                         f"dataset parameters, got {params!r}")
+    return {
+        "kind": "trace",
+        "dataset": dataset,
+        "params": {str(k): _require_number(v, f"graph.params.{k}")
+                   for k, v in params.items()},
+        "N": _require_nonneg(graph["N"], "graph.N"),
+        "T": _require_nonneg(graph["T"], "graph.T"),
+        "high_degree_fraction": _require_fraction(
+            graph.get("high_degree_fraction", 0.1),
+            "graph.high_degree_fraction"),
+    }
+
+
 def _normalized_graph(graph: Mapping[str, Any]) -> tuple[dict, str]:
     keys = set(graph)
+    kind = graph.get("kind")
+    if kind is not None and kind != "trace":
+        raise ValueError(f"unknown graph kind {kind!r}; the only explicit "
+                         "kind is 'trace' (tile and full graphs are "
+                         "recognized by their field sets)")
+    if kind == "trace" or "dataset" in keys:
+        return _normalized_trace_graph(graph), "trace"
     if {"V", "E"} & keys:
         missing = set(FULL_GRAPH_FIELDS) - keys
         if missing:
@@ -182,9 +250,9 @@ def _normalized_graph(graph: Mapping[str, Any]) -> tuple[dict, str]:
         if extra:
             raise ValueError(f"unknown full-graph keys {sorted(extra)}; "
                              f"allowed: {sorted(allowed)}")
-        out = {f: _require_number(graph[f], f"graph.{f}")
+        out = {f: _require_nonneg(graph[f], f"graph.{f}")
                for f in FULL_GRAPH_FIELDS}
-        out["high_degree_fraction"] = _require_number(
+        out["high_degree_fraction"] = _require_fraction(
             graph.get("high_degree_fraction", 0.1),
             "graph.high_degree_fraction")
         return out, "full"
@@ -194,8 +262,9 @@ def _normalized_graph(graph: Mapping[str, Any]) -> tuple[dict, str]:
         raise ValueError(
             f"tile scenario graph must give exactly {TILE_GRAPH_FIELDS} "
             f"(missing {sorted(missing)}, unknown {sorted(extra)}); "
-            "use Scenario.tile(...) to fill the paper's defaults, or give "
-            "V/E for a full-graph scenario")
+            "use Scenario.tile(...) to fill the paper's defaults, give "
+            "V/E for a full-graph scenario, or kind='trace' with a "
+            "dataset reference for an exact edge-list scenario")
     return ({f: _require_number(graph[f], f"graph.{f}")
              for f in TILE_GRAPH_FIELDS}, "tile")
 
@@ -252,6 +321,18 @@ class Scenario:
             raise ValueError(
                 "tile_vertices tiling requires a full-graph scenario "
                 "(give V/E instead of K/L/P)")
+        if kind == "trace":
+            if not tiled:
+                raise ValueError(
+                    "a trace scenario needs a composition with "
+                    "tile_vertices — the capacity sets the exact tile "
+                    "schedule the edge list is partitioned into "
+                    "(DESIGN.md §12)")
+            if self.composition.halo_dedup != 1.0:
+                raise ValueError(
+                    "halo_dedup must stay 1 for a trace scenario: the "
+                    "exact schedule already deduplicates remote sources "
+                    "per tile, so a divisor would double-count the dedup")
         if self.expect is not None:
             known = {"total_bits", "total_iterations"}
             unknown = set(self.expect) - known
@@ -299,19 +380,47 @@ class Scenario:
                  "high_degree_fraction": high_degree_fraction}
         return cls(dataflow=dataflow, graph=graph, composition=comp, **kw)
 
+    @classmethod
+    def trace(cls, dataflow: str, *, dataset: str,
+              params: Optional[Mapping[str, float]] = None, N: float,
+              T: float, tile_vertices: float = 1024.0,
+              widths: Optional[Sequence[float]] = None,
+              residency: str = "spill",
+              high_degree_fraction: float = 0.1, **kw: Any) -> "Scenario":
+        """Trace scenario: exact edge-list schedule over a named dataset.
+
+        ``dataset`` / ``params`` reference a registered deterministic
+        trace dataset (:func:`repro.core.trace.resolve_trace_dataset`);
+        the graph's V/E come from the resolved edge list, so only the
+        feature widths are declared here (DESIGN.md §12).
+        """
+        comp = Composition(
+            widths=None if widths is None else tuple(widths),
+            residency=residency, tile_vertices=tile_vertices)
+        graph = {"kind": "trace", "dataset": dataset,
+                 "params": dict(params or {}), "N": N, "T": T,
+                 "high_degree_fraction": high_degree_fraction}
+        return cls(dataflow=dataflow, graph=graph, composition=comp, **kw)
+
     # -- structure --------------------------------------------------------
+    def _graph_key(self) -> tuple:
+        """Canonical hashable view of the graph mapping (nested params)."""
+        return tuple(
+            (k, tuple(sorted(v.items())) if isinstance(v, Mapping) else v)
+            for k, v in sorted(self.graph.items()))
+
     def __hash__(self) -> int:
         # frozen=True would auto-hash over the dict fields and raise; hash
         # the canonical tuple instead so scenarios work in sets/dict keys.
         expect = (None if self.expect is None
                   else tuple(sorted(self.expect.items())))
-        return hash((self.dataflow, tuple(sorted(self.graph.items())),
+        return hash((self.dataflow, self._graph_key(),
                      tuple(sorted(self.hardware.items())), self.composition,
                      self.conformance, expect, self.label, self.workload))
 
     @property
     def graph_kind(self) -> str:
-        """``"tile"`` or ``"full"``."""
+        """``"tile"``, ``"full"``, or ``"trace"``."""
         return self._graph_kind  # type: ignore[attr-defined]
 
     def plan_key(self) -> tuple:
@@ -320,16 +429,25 @@ class Scenario:
         Scenarios sharing a plan key differ only in numeric leaves (graph
         values, hardware override values, widths values, tile capacities),
         all of which stack along one batch axis for a single broadcast
-        evaluation (DESIGN.md §11).
+        evaluation (DESIGN.md §11).  For trace scenarios the dataset
+        reference and the tile capacity are structural too: they fix the
+        concrete edge list and the tile-axis length, so only scenarios
+        sharing both can join one exact-schedule evaluation.
         """
         comp = None if self.composition is None else self.composition.signature()
-        return (self.dataflow, self.graph_kind,
-                tuple(sorted(self.hardware)), comp)
+        key = (self.dataflow, self.graph_kind,
+               tuple(sorted(self.hardware)), comp)
+        if self.graph_kind == "trace":
+            key += (self.graph["dataset"],
+                    tuple(sorted(self.graph["params"].items())),
+                    self.composition.tile_vertices)
+        return key
 
     # -- serialization ----------------------------------------------------
     def to_dict(self) -> dict:
-        out: dict[str, Any] = {"dataflow": self.dataflow,
-                               "graph": dict(self.graph)}
+        graph = {k: dict(v) if isinstance(v, Mapping) else v
+                 for k, v in self.graph.items()}
+        out: dict[str, Any] = {"dataflow": self.dataflow, "graph": graph}
         if self.hardware:
             out["hardware"] = dict(self.hardware)
         if self.composition is not None:

@@ -24,6 +24,7 @@ import numpy as np
 
 from repro.core import registry
 from repro.core.notation import GraphTileParams, paper_default_graph
+from repro.core.trace import GraphTrace, register_trace_dataset
 
 from .scenario import Scenario, _trusted_tile
 
@@ -33,6 +34,7 @@ __all__ = [
     "template",
     "template_names",
     "tile_scenarios_from_graph",
+    "trace_scenarios_from_graph",
     "DEFAULT_K_SWEEP",
     "DEFAULT_M_SWEEP",
     "DEFAULT_B_SWEEP",
@@ -113,6 +115,55 @@ def tile_scenarios_from_graph(
                  **scenario_kw)
         for cell, hcell in zip(zip(*fcols), zip(*hcols) if hcols
                                else ((),) * n)
+    ]
+
+
+def trace_scenarios_from_graph(
+    graph,
+    name: str,
+    *,
+    dataflows: Optional[Sequence[str]] = None,
+    tile_vertices: Sequence[float] = (1024.0,),
+    N: Optional[float] = None,
+    T: Optional[float] = None,
+    widths: Optional[Sequence[float]] = None,
+    residency: str = "spill",
+    high_degree_fraction: float = 0.1,
+    workload: str = "",
+    overwrite: bool = False,
+) -> list[Scenario]:
+    """Exact-schedule scenarios over an in-memory graph (DESIGN.md §12).
+
+    ``graph`` is a :class:`~repro.core.trace.GraphTrace` or anything with
+    ``senders``/``receivers``/``n_nodes`` (e.g. a
+    :class:`repro.data.synthetic.GraphArrays`).  It is registered as the
+    parameterless trace dataset ``name``, and one ``{"kind": "trace"}``
+    scenario per (dataflow, tile capacity) referencing it is returned.
+    The scenarios are pure data, but they replay only where ``name`` is
+    registered — for cross-process scenario files, reference the built-in
+    deterministic datasets (``power_law``, ``cora``, ...) instead.
+
+    Either ``widths`` (multi-layer chain; N/T default to its endpoints)
+    or explicit ``N``/``T`` must be given.
+    """
+    trace = graph if isinstance(graph, GraphTrace) else GraphTrace.from_arrays(graph)
+    if widths is not None:
+        widths = tuple(float(w) for w in widths)
+        N = widths[0] if N is None else N
+        T = widths[-1] if T is None else T
+    if N is None or T is None:
+        raise ValueError("give widths (multi-layer) or explicit N and T "
+                         "feature widths for the trace scenarios")
+    register_trace_dataset(name, lambda: trace, overwrite=overwrite)
+    names = tuple(dataflows) if dataflows is not None else registry.names()
+    return [
+        Scenario.trace(df, dataset=name, N=float(N), T=float(T),
+                       tile_vertices=float(cap), widths=widths,
+                       residency=residency,
+                       high_degree_fraction=high_degree_fraction,
+                       label=f"{name}@{df}/tile{int(cap)}",
+                       workload=workload or name)
+        for df in names for cap in tile_vertices
     ]
 
 
@@ -224,6 +275,36 @@ def cora_end_to_end(
                                "residency": residency})
 
 
+def cora_trace(
+        accelerators: Optional[Sequence[str]] = None,
+        tile_vertices: Optional[np.ndarray] = None,
+        widths: Sequence[float] = (1433, 16, 7),
+        seed: float = 0.0, alpha: float = 1.6,
+        residency: str = "spill") -> TemplateBatch:
+    """Exact-schedule companion of ``cora_end_to_end``: the same L-layer
+    GCN-on-Cora query over the deterministic Cora-sized power-law trace
+    (dataset ``"cora"``), one plan group per (dataflow, capacity).  The
+    tile capacity is structural for a trace (it fixes the tile-axis
+    length), so the default sweeps a single capacity to keep the template
+    at one broadcast evaluation per dataflow."""
+    names = tuple(accelerators) if accelerators is not None else registry.names()
+    caps = np.atleast_1d(_f64(np.array([1024], np.float64)
+                              if tile_vertices is None else tile_vertices))
+    widths = tuple(float(w) for w in widths)
+    params = {"seed": float(seed), "alpha": float(alpha)}
+    scenarios = tuple(
+        Scenario.trace(name, dataset="cora", params=params,
+                       N=widths[0], T=widths[-1], tile_vertices=float(cap),
+                       widths=widths, residency=residency,
+                       label=f"{name}@tile{int(cap)}/trace",
+                       workload="gcn-cora-trace")
+        for name in names for cap in caps)
+    return TemplateBatch(figure="cora_trace", scenarios=scenarios,
+                         axes={"tile_vertices": caps},
+                         meta={"accelerators": names, "widths": widths,
+                               "residency": residency, "dataset": "cora"})
+
+
 TEMPLATES: dict[str, Callable[..., TemplateBatch]] = {
     "fig3": fig3,
     "fig4": fig4,
@@ -233,6 +314,7 @@ TEMPLATES: dict[str, Callable[..., TemplateBatch]] = {
     "fig7": fig7,
     "comparison": comparison,
     "cora_end_to_end": cora_end_to_end,
+    "cora_trace": cora_trace,
 }
 
 

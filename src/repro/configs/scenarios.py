@@ -75,15 +75,48 @@ def _lm_scenarios(arch: ArchDef, shape: ShapeSpec, dataflows, Scenario,
     ]
 
 
+def _gnn_trace_dataset(arch: ArchDef, shape: ShapeSpec) -> tuple[str, dict]:
+    """DESIGN.md §12: the deterministic trace dataset behind a GNN shape.
+
+    Batched molecular shapes resolve to the block-diagonal ``molecule``
+    union graph; the Cora cell resolves to the Cora-sized ``cora``
+    dataset; every other shape replays a seeded ``power_law`` graph at
+    the shape's exact V/E (self-loop-free, so E matches the shape).
+    """
+    p = shape.params
+    if "batch" in p:
+        return "molecule", {"batch": float(p["batch"]),
+                            "n_nodes": float(p["n_nodes"]),
+                            "n_edges": float(p["n_edges"]),
+                            "seed": 0.0, "step": 0.0}
+    if arch.name == "gcn-cora" and shape.name == "full_graph_sm":
+        return "cora", {}
+    return "power_law", {"n_nodes": float(p["n_nodes"]),
+                         "n_edges": float(p["n_edges"]), "seed": 0.0}
+
+
 def _gnn_scenarios(arch: ArchDef, shape: ShapeSpec, dataflows, Scenario,
                    *, tile_vertices: float, high_degree_fraction: float,
-                   **_kw) -> list:
+                   graph_kind: str = "full", **_kw) -> list:
     p = shape.params
     batch = float(p.get("batch", 1))
     V = float(p["n_nodes"]) * batch
     E = float(p["n_edges"]) * batch
     cfg = arch.make_config()
     widths = _widths(arch, cfg, p, _gnn_generic_widths)
+    if graph_kind == "trace":
+        dataset, params = _gnn_trace_dataset(arch, shape)
+        return [
+            Scenario.trace(
+                df, dataset=dataset, params=params,
+                N=widths[0], T=widths[-1],
+                tile_vertices=min(tile_vertices, max(V, 1.0)),
+                widths=widths, residency="spill",
+                high_degree_fraction=high_degree_fraction,
+                label=f"{arch.name}/{shape.name}@{df}/trace",
+                workload=f"{arch.name}/{shape.name}")
+            for df in dataflows
+        ]
     return [
         Scenario.full_graph(
             df, V=V, E=E, N=widths[0], T=widths[-1],
@@ -121,18 +154,32 @@ def arch_scenarios(arch: ArchDef, *,
                    shapes: Optional[Sequence[str]] = None,
                    dataflows: Optional[Sequence[str]] = None,
                    tile_vertices: float = 1024.0,
-                   high_degree_fraction: float = 0.1) -> list:
+                   high_degree_fraction: float = 0.1,
+                   graph_kind: str = "full") -> list:
     """One Scenario per (shape, dataflow) for a workload config.
 
     ``shapes`` defaults to every non-skipped shape of the arch;
     ``dataflows`` to every registered dataflow.  The result is pure data —
     hand it to :func:`repro.api.evaluate_scenarios` (the planner batches
     all of it into one broadcast evaluation per dataflow).
+
+    ``graph_kind="trace"`` (GNN family only) swaps the uniform full-graph
+    composition for §12 exact-schedule scenarios over the deterministic
+    trace dataset matching each shape.
     """
     from repro.api.scenario import Scenario
     if arch.family not in _FAMILIES:
         raise ValueError(f"no scenario bridge for family {arch.family!r} "
                          f"(arch {arch.name!r})")
+    if graph_kind not in ("full", "trace"):
+        raise ValueError(f"unknown graph_kind {graph_kind!r}; "
+                         "expected 'full' or 'trace'")
+    if graph_kind == "trace" and arch.family != "gnn":
+        raise ValueError(
+            f"graph_kind='trace' needs a real edge list, which only the "
+            f"gnn family shapes carry (arch {arch.name!r} is "
+            f"{arch.family!r}); lm/recsys tiles are synthetic-banded and "
+            "stay on the closed-form schedule")
     if dataflows is None:
         from repro.core import registry
         dataflows = registry.names()
@@ -146,5 +193,6 @@ def arch_scenarios(arch: ArchDef, *,
         out.extend(_FAMILIES[arch.family](
             arch, arch.shapes[sname], tuple(dataflows), Scenario,
             tile_vertices=float(tile_vertices),
-            high_degree_fraction=float(high_degree_fraction)))
+            high_degree_fraction=float(high_degree_fraction),
+            graph_kind=graph_kind))
     return out

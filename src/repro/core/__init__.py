@@ -11,6 +11,9 @@ Public surface:
 * :mod:`repro.core.compose` — composition layer: ``MultiLayerModel`` (L
   chained GNN layers with residency policy) and ``TiledGraphModel`` (full
   graphs over a tile schedule with halo reloads).
+* :mod:`repro.core.trace` — trace-driven graph backend: exact edge-list
+  tile schedules and unique-remote-source halo counts replacing the
+  uniform-tile approximation (DESIGN.md §12).
 * :mod:`repro.core.sweep` — Figures 3-7 sweep engine plus the stacked
   all-accelerator sweep.
 * :mod:`repro.core.tpu_model` — the methodology adapted to a TPU v5e pod
@@ -43,6 +46,8 @@ from .notation import (AWBGCNHardwareParams, EnGNHardwareParams,
                        PAPER_DEFAULT_HYGCN, TiledSpMMHardwareParams,
                        paper_default_graph)
 from .spmm_tiled import SPMM_TILED_SPEC, TiledSpMMModel
+from .trace import (GraphTrace, TraceSchedule, register_trace_dataset,
+                    resolve_trace_dataset, trace_dataset_names)
 from .spmm_unfused import SPMM_UNFUSED_SPEC, UnfusedSpMMModel
 from .terms import (AcceleratorModel, L1_CLASSES, L2_CLASSES, CACHE_CLASSES,
                     ModelOutput, MovementTerm, tabulate)
@@ -76,6 +81,12 @@ __all__ = [
     "TiledGraphModel",
     "FullGraphParams",
     "RESIDENCY_POLICIES",
+    # trace backend (exact edge-list schedules, DESIGN.md §12)
+    "GraphTrace",
+    "TraceSchedule",
+    "register_trace_dataset",
+    "resolve_trace_dataset",
+    "trace_dataset_names",
     # notation
     "GraphTileParams",
     "EnGNHardwareParams",

@@ -13,7 +13,10 @@ This module composes any registered dataflow upward (DESIGN.md §7):
 * :class:`TiledGraphModel` — cover a full graph: a tile schedule is derived
   from (V, E) and the tile vertex capacity, every tile re-evaluates the
   inner model, and an inter-tile **halo-reload** term charges re-fetching
-  remote source features for cut edges.
+  remote source features for cut edges.  Passing a
+  :class:`~repro.core.trace.GraphTrace` swaps the uniform approximation
+  for the **exact** edge-list-driven schedule (per-tile K/L/P and
+  deduplicated unique-remote-source halo counts, DESIGN.md §12).
 
 Both compose: ``TiledGraphModel(MultiLayerModel("engn", widths))`` answers
 the paper's open question "total movement for GCN-on-Cora end-to-end".
@@ -31,6 +34,7 @@ import numpy as np
 from .dataflow import DataflowSpec, SpecModel
 from .notation import GraphTileParams, ParamArray
 from .terms import ModelOutput, MovementTerm, ceil
+from .trace import GraphTrace
 
 __all__ = [
     "MultiLayerModel",
@@ -44,6 +48,24 @@ RESIDENCY_POLICIES = ("spill", "resident")
 
 def _f64(x) -> np.ndarray:
     return np.asarray(x, dtype=np.float64)
+
+
+def _pairwise_sum(a: np.ndarray) -> np.ndarray:
+    """Sum over the last axis by pairwise halving (deterministic tree).
+
+    The trace evaluation reduces its tile axis with this so that a
+    schedule of ``2^k`` identical tiles sums **bit-identically** to the
+    uniform closed form's ``n_tiles * per_tile`` product (every halving
+    step doubles an exactly-representable value) — the property the ring
+    bit-match test pins.  Zero-padding to even length is exact.
+    """
+    a = _f64(a)
+    while a.shape[-1] > 1:
+        if a.shape[-1] % 2:
+            a = np.concatenate(
+                [a, np.zeros(a.shape[:-1] + (1,), dtype=np.float64)], axis=-1)
+        a = a[..., 0::2] + a[..., 1::2]
+    return a[..., 0]
 
 
 def _resolve_spec(dataflow) -> DataflowSpec:
@@ -166,7 +188,7 @@ class FullGraphParams:
     high_degree_fraction: ParamArray = 0.1
 
     def __post_init__(self) -> None:
-        for field in ("V", "E"):
+        for field in ("V", "E", "N", "T", "high_degree_fraction"):
             val = _f64(getattr(self, field))
             if not np.all(np.isfinite(val)):
                 raise ValueError(f"FullGraphParams.{field} must be finite, "
@@ -174,8 +196,14 @@ class FullGraphParams:
             if np.any(val < 0):
                 raise ValueError(
                     f"FullGraphParams.{field} must be non-negative "
-                    f"(got {getattr(self, field)!r}); a negative graph size "
-                    "would silently produce a nonsense tile schedule")
+                    f"(got {getattr(self, field)!r}); a negative value "
+                    "would silently produce negative movement totals")
+        hdf = _f64(self.high_degree_fraction)
+        if np.any(hdf > 1.0):
+            raise ValueError(
+                f"FullGraphParams.high_degree_fraction is a fraction of the "
+                f"tile's vertices and must be <= 1 "
+                f"(got {self.high_degree_fraction!r})")
 
     def replace(self, **kw) -> "FullGraphParams":
         # dataclasses.replace re-runs __post_init__, so replaced values are
@@ -186,18 +214,31 @@ class FullGraphParams:
 class TiledGraphModel:
     """Sum a per-tile model over the tile schedule of a full graph.
 
-    The schedule slices V vertices into ``n_tiles = ceil(V / tile_vertices)``
-    balanced tiles of ``K = ceil(V / n_tiles)`` vertices and ``P = ceil(E /
-    n_tiles)`` intra-tile edges (the paper's uniform-tile assumption).  On
-    top of ``n_tiles x`` the per-tile movement, an inter-tile ``haloreload``
-    L2-L1 term charges re-fetching remote source features for cut edges:
-    with a random balanced partition the expected cut fraction is
-    ``1 - 1/n_tiles``, and ``halo_dedup >= 1`` divides it for duplicate
-    sources cached within a tile pass.
+    The default (uniform) schedule slices V vertices into ``n_tiles =
+    ceil(V / tile_vertices)`` balanced tiles of ``K = ceil(V / n_tiles)``
+    vertices and ``P = ceil(E / n_tiles)`` intra-tile edges (the paper's
+    uniform-tile assumption).  On top of ``n_tiles x`` the per-tile
+    movement, an inter-tile ``haloreload`` L2-L1 term charges re-fetching
+    remote source features for cut edges: with a random balanced partition
+    the expected cut fraction is ``1 - 1/n_tiles``, and ``halo_dedup >= 1``
+    (scalar or array) divides it for duplicate sources cached within a
+    tile pass.
+
+    Passing ``trace`` (a :class:`~repro.core.trace.GraphTrace`) replaces
+    both approximations with the edge list's exact schedule (DESIGN.md
+    §12): each tile is evaluated at its own exact ``(K_t, L_t, P_t)`` in
+    one broadcast call over a trailing tile axis, and ``haloreload``
+    charges the exact per-tile **unique**-remote-source counts, so
+    ``halo_dedup`` must stay 1 (the dedup is measured, not estimated).
+    With a trace, ``tile_vertices`` must be a scalar (the tile axis length
+    is a structural property, not a sweepable leaf); other parameters may
+    still be arrays, carried on axes *before* the tile axis (the scenario
+    planner stacks batches that way automatically).
     """
 
     def __init__(self, inner, *, tile_vertices: ParamArray = 1024,
-                 halo_dedup: float = 1.0) -> None:
+                 halo_dedup: ParamArray = 1.0,
+                 trace: GraphTrace | None = None) -> None:
         if isinstance(inner, MultiLayerModel):
             self.inner = inner
         else:
@@ -210,11 +251,30 @@ class TiledGraphModel:
                 "holds at least one vertex, and zero/negative capacities "
                 "silently produce nonsense schedules")
         self.tile_vertices = tile_vertices
-        self.halo_dedup = float(halo_dedup)
-        if self.halo_dedup < 1.0:
-            raise ValueError("halo_dedup must be >= 1 (it divides halo traffic)")
+        hd = _f64(halo_dedup)
+        if not np.all(np.isfinite(hd)) or np.any(hd < 1.0):
+            raise ValueError(
+                f"halo_dedup must be finite and >= 1 (it divides halo "
+                f"traffic), got {halo_dedup!r}")
+        self.halo_dedup = hd
+        if trace is not None:
+            if not isinstance(trace, GraphTrace):
+                raise TypeError(f"trace must be a GraphTrace, "
+                                f"got {type(trace).__name__}")
+            if tv.ndim != 0:
+                raise ValueError(
+                    "a trace schedule needs a scalar tile_vertices: the "
+                    "tile count is structural (it sets the tile axis "
+                    "length), so capacities cannot sweep as an array")
+            if np.any(hd != 1.0):
+                raise ValueError(
+                    "halo_dedup must be 1 with a trace: the exact schedule "
+                    "already deduplicates remote sources per tile "
+                    "(unique-source halo counts), so an extra divisor "
+                    "would double-count the dedup")
+        self.trace = trace
         inner_name = getattr(self.inner, "name", type(self.inner).__name__)
-        self.name = f"{inner_name}_tiled"
+        self.name = f"{inner_name}_{'trace' if trace is not None else 'tiled'}"
 
     def resolve_hw(self, hw=None):
         return self.inner.spec.resolve_hw(hw)
@@ -237,7 +297,74 @@ class TiledGraphModel:
             return self.inner.halo_feature_elems()
         return None  # use the full graph's N
 
+    # -- exact (trace-driven) schedule ------------------------------------
+    def _promoted_inner(self):
+        """Inner model with every numeric leaf given a trailing singleton
+        axis, so batch/sweep axes broadcast against the tile axis."""
+        if isinstance(self.inner, MultiLayerModel):
+            widths = tuple(_f64(w)[..., None] for w in self.inner.widths)
+            return MultiLayerModel(self.inner.spec, widths,
+                                   residency=self.inner.residency)
+        return self.inner
+
+    @staticmethod
+    def _promoted_hw(hw):
+        """Hardware record with a trailing singleton axis on every field."""
+        kw = {f.name: _f64(getattr(hw, f.name))[..., None]
+              for f in dataclasses.fields(hw)
+              if getattr(hw, f.name) is not None}
+        return hw.replace(**kw)
+
+    def _evaluate_trace(self, full: FullGraphParams, hw) -> ModelOutput:
+        hw = self.resolve_hw(hw)
+        tr = self.trace
+        if np.any(_f64(full.V) != tr.n_nodes) or np.any(_f64(full.E) != tr.n_edges):
+            raise ValueError(
+                f"FullGraphParams (V={full.V!r}, E={full.E!r}) does not "
+                f"match the trace (V={tr.n_nodes}, E={tr.n_edges}); a trace "
+                "schedule is exact, so the declared graph must be the "
+                "traced graph")
+        sched = tr.schedule(self.tile_vertices)
+        m = sched.n_tiles
+        # Tile axis is the LAST axis: every non-tile numeric leaf gets a
+        # trailing singleton so sweeps/batches broadcast against it.
+        K_t = _f64(sched.vertex_counts)
+        hdf = _f64(full.high_degree_fraction)[..., None]
+        tile = GraphTileParams(
+            N=_f64(full.N)[..., None],
+            T=_f64(full.T)[..., None],
+            K=K_t,
+            L=np.floor(K_t * hdf),
+            P=_f64(sched.edge_counts),
+        )
+        per_tile = self._promoted_inner().evaluate(tile, self._promoted_hw(hw))
+        # Pairwise tile-axis reduction: bit-identical to the uniform path's
+        # `n_tiles * per_tile` product when all tiles are equal and n_tiles
+        # is a power of two (the ring bit-match invariant, DESIGN.md §12).
+        def collapse(x):
+            a = _f64(x)
+            return _pairwise_sum(np.broadcast_to(
+                a, np.broadcast_shapes(a.shape, (m,))))
+
+        terms = [MovementTerm(t.name, t.hierarchy,
+                              collapse(t.data_bits), collapse(t.iterations))
+                 for t in per_tile.terms]
+        width = self._halo_width()
+        if width is None:
+            width = _f64(full.N)
+        halo_bits = _f64(sched.halo_total) * width * _f64(hw.sigma)
+        halo_iters = ceil(halo_bits / _f64(hw.B))
+        terms.append(MovementTerm("haloreload", "L2-L1", halo_bits, halo_iters))
+        return ModelOutput(
+            accelerator=self.name,
+            terms=tuple(terms),
+            meta={"hw": hw, "graph": full, "n_tiles": float(m), "tile": tile,
+                  "inner": self.inner, "trace": tr, "schedule": sched},
+        )
+
     def evaluate(self, full: FullGraphParams, hw=None) -> ModelOutput:
+        if self.trace is not None:
+            return self._evaluate_trace(full, hw)
         hw = self.resolve_hw(hw)
         n_tiles, tile = self.tile_schedule(full)
         per_tile = self.inner.evaluate(tile, hw)

@@ -1,0 +1,369 @@
+"""Trace-driven graph backend: exact tile schedules from real edge lists.
+
+The paper's composition layer (DESIGN.md §7) covers a full graph with
+*uniform* tiles — `K = ceil(V / n_tiles)` vertices, `P = ceil(E / n_tiles)`
+edges per tile — and charges halo reloads at the random-partition expected
+cut `E * (1 - 1/n_tiles)`.  Its own narrative (echoed by the GNN computing
+surveys in PAPERS.md) is that real-world degree imbalance is what actually
+drives communication, yet the closed forms never touch an actual graph.
+
+This module closes that gap (DESIGN.md §12).  A :class:`GraphTrace` wraps
+one concrete edge list (CSR-ified by destination vertex) and derives, for
+a balanced contiguous vertex partition, the **exact** quantities the
+uniform schedule approximates:
+
+* per-tile vertex counts ``K_t`` and destination-edge counts ``P_t``
+  (straight from the CSR row pointer — no per-edge Python loop anywhere);
+* per-tile **unique remote source** counts — the true halo traffic, with
+  within-tile duplicate sources deduplicated exactly (so the uniform
+  model's ``halo_dedup`` knob is replaced by measurement);
+* degree-aware cache hit fractions: the share of a tile's aggregation
+  reads served if the L most-referenced sources of the tile pass are
+  pinned in a dedicated cache (EnGN's L2* narrative, measured).
+
+:class:`~repro.core.compose.TiledGraphModel` accepts a trace as an
+alternative schedule source; the scenario front door exposes it as the
+third graph kind ``{"kind": "trace", "dataset": ..., "params": ...}``
+with dataset references resolving to the deterministic generators in
+:mod:`repro.data.synthetic` (see ``TRACE_DATASETS`` below), so trace
+scenarios stay pure, serializable data.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Any, Callable, Mapping, Optional
+
+import numpy as np
+
+__all__ = [
+    "GraphTrace",
+    "TraceSchedule",
+    "register_trace_dataset",
+    "resolve_trace_dataset",
+    "trace_dataset_names",
+    "clear_trace_cache",
+    "CORA_V",
+    "CORA_E",
+]
+
+#: Cora citation-graph size (kept in sync with ``configs.base.GNN_SHAPES
+#: ["full_graph_sm"]`` and the gcn-cora config; asserted in tests).
+CORA_V = 2708
+CORA_E = 10556
+
+
+def _f64(x) -> np.ndarray:
+    return np.asarray(x, dtype=np.float64)
+
+
+@dataclass(frozen=True)
+class TraceSchedule:
+    """Exact per-tile schedule of one (trace, tile capacity) pair.
+
+    Tile ``t`` owns the contiguous vertex range ``[t*K, min((t+1)*K, V))``
+    with ``n_tiles = ceil(V / capacity)`` and ``K = ceil(V / n_tiles)`` —
+    the same balanced split the uniform schedule assumes, so the two
+    backends differ only by what the edge list actually does.
+
+    Attributes:
+      n_tiles: number of tiles.
+      capacity: requested tile vertex capacity.
+      K: owned-vertex stride (``ceil(V / n_tiles)``).
+      vertex_counts: ``(n_tiles,)`` exact vertices per tile.
+      edge_counts: ``(n_tiles,)`` exact edges per destination tile.
+      halo_counts: ``(n_tiles,)`` exact **unique** remote sources per tile
+        (the halo features a tile pass must fetch from other tiles).
+      remote_edge_counts: ``(n_tiles,)`` cut edges per destination tile
+        (before dedup; ``halo_counts <= remote_edge_counts``).
+    """
+
+    n_tiles: int
+    capacity: int
+    K: int
+    vertex_counts: np.ndarray
+    edge_counts: np.ndarray
+    halo_counts: np.ndarray
+    remote_edge_counts: np.ndarray
+    # Per-(tile, source) reference multiplicities, sorted by (tile,
+    # -count): the basis of the degree-aware cache-hit computation.
+    _pair_tile: np.ndarray = field(repr=False)
+    _pair_count: np.ndarray = field(repr=False)
+    _pair_rank: np.ndarray = field(repr=False)
+
+    @property
+    def n_edges(self) -> int:
+        return int(self.edge_counts.sum())
+
+    @property
+    def cut_edges(self) -> int:
+        """Total edges whose source tile differs from their destination tile."""
+        return int(self.remote_edge_counts.sum())
+
+    @property
+    def halo_total(self) -> int:
+        """Total unique-remote-source fetches across all tiles (exact halo)."""
+        return int(self.halo_counts.sum())
+
+    def uniform_halo_estimate(self) -> float:
+        """The paper's random-partition expected cut, ``E * (1 - 1/n_tiles)``."""
+        return float(self.n_edges) * (1.0 - 1.0 / self.n_tiles)
+
+    def cache_hit_fraction(self, high_degree_fraction: float = 0.1) -> np.ndarray:
+        """Exact per-tile degree-aware cache hit fractions.
+
+        If tile ``t`` pins its ``L_t = floor(K_t * high_degree_fraction)``
+        most-referenced source vertices in a dedicated cache (EnGN's L2*
+        high-degree cache), this is the fraction of the tile's aggregation
+        reads those sources serve — computed from the actual reference
+        multiplicities, vectorized over all tiles at once.
+        """
+        hdf = float(high_degree_fraction)
+        if not np.isfinite(hdf) or not 0.0 <= hdf <= 1.0:
+            raise ValueError(f"high_degree_fraction must be in [0, 1], "
+                             f"got {high_degree_fraction!r}")
+        L_t = np.floor(self.vertex_counts * hdf)
+        hit = self._pair_rank < L_t[self._pair_tile]
+        hits = np.bincount(self._pair_tile[hit],
+                           weights=self._pair_count[hit],
+                           minlength=self.n_tiles)
+        return hits / np.maximum(self.edge_counts, 1.0)
+
+    def stats(self, high_degree_fraction: float = 0.1) -> dict:
+        """Summary record for benchmarks / result metadata (JSON-able)."""
+        est = self.uniform_halo_estimate()
+        exact = self.halo_total
+        edge = _f64(self.edge_counts)
+        hit = self.cache_hit_fraction(high_degree_fraction)
+        return {
+            "n_tiles": int(self.n_tiles),
+            "capacity": int(self.capacity),
+            "n_edges": int(self.n_edges),
+            "cut_edges": int(self.cut_edges),
+            "halo_exact": int(exact),
+            "halo_uniform_estimate": est,
+            "halo_estimate_over_exact": (est / exact) if exact else None,
+            "edge_imbalance": float(edge.max() / max(edge.mean(), 1e-300)),
+            "cache_hit_fraction_mean": float(hit.mean()),
+            "cache_hit_fraction_min": float(hit.min()),
+            "cache_hit_fraction_max": float(hit.max()),
+        }
+
+
+class GraphTrace:
+    """One concrete directed edge list, CSR-ified by destination vertex.
+
+    ``senders[i] -> receivers[i]`` is edge ``i``; aggregation reads source
+    (sender) features into destination (receiver) vertices, matching the
+    destination-stationary tiling of the paper's dataflows.  Construction
+    sorts the edge list by destination once (the CSR row pointer), after
+    which every schedule quantity is segment algebra — ``np.bincount`` /
+    ``np.unique`` / ``np.lexsort`` over whole arrays, never a Python loop
+    over edges.
+    """
+
+    def __init__(self, senders, receivers, n_nodes: int) -> None:
+        snd = np.asarray(senders)
+        rcv = np.asarray(receivers)
+        if snd.ndim != 1 or rcv.ndim != 1 or snd.shape != rcv.shape:
+            raise ValueError(
+                f"senders/receivers must be 1-D arrays of equal length, got "
+                f"shapes {snd.shape} and {rcv.shape}")
+        if not (np.issubdtype(snd.dtype, np.integer)
+                and np.issubdtype(rcv.dtype, np.integer)):
+            raise ValueError("senders/receivers must be integer vertex ids")
+        n_nodes = int(n_nodes)
+        if n_nodes < 1:
+            raise ValueError(f"n_nodes must be >= 1, got {n_nodes}")
+        snd = snd.astype(np.int64, copy=False)
+        rcv = rcv.astype(np.int64, copy=False)
+        if snd.size and (snd.min() < 0 or snd.max() >= n_nodes
+                         or rcv.min() < 0 or rcv.max() >= n_nodes):
+            raise ValueError(
+                f"edge endpoints must lie in [0, {n_nodes}); got sender "
+                f"range [{snd.min()}, {snd.max()}] and receiver range "
+                f"[{rcv.min()}, {rcv.max()}]")
+        self.n_nodes = n_nodes
+        self.senders = snd
+        self.receivers = rcv
+        # CSR by destination: row_ptr[v] .. row_ptr[v+1] indexes the
+        # (stable-sorted) edges aggregating INTO vertex v.
+        order = np.argsort(rcv, kind="stable")
+        self.csr_senders = snd[order]
+        counts = np.bincount(rcv, minlength=n_nodes)
+        self.row_ptr = np.zeros(n_nodes + 1, dtype=np.int64)
+        np.cumsum(counts, out=self.row_ptr[1:])
+        self._schedules: dict[int, TraceSchedule] = {}
+
+    # -- construction ------------------------------------------------------
+    @classmethod
+    def from_arrays(cls, graph) -> "GraphTrace":
+        """From anything with ``senders`` / ``receivers`` / ``n_nodes``
+        attributes (e.g. :class:`repro.data.synthetic.GraphArrays`)."""
+        return cls(graph.senders, graph.receivers, graph.n_nodes)
+
+    # -- basic measures ----------------------------------------------------
+    @property
+    def n_edges(self) -> int:
+        return int(self.senders.shape[0])
+
+    def in_degrees(self) -> np.ndarray:
+        return np.diff(self.row_ptr)
+
+    def out_degrees(self) -> np.ndarray:
+        return np.bincount(self.senders, minlength=self.n_nodes)
+
+    # -- the partitioner ---------------------------------------------------
+    def schedule(self, tile_vertices) -> TraceSchedule:
+        """Exact balanced-partition schedule for one tile capacity (cached).
+
+        Vectorized end to end: tile membership is integer division by the
+        stride, per-tile edge counts are CSR row-pointer differences at
+        the tile boundaries, and halo / cache statistics are one
+        ``np.unique`` + ``np.lexsort`` over ``(tile, source)`` keys.
+        """
+        cap = int(tile_vertices)
+        if cap != float(tile_vertices) or cap < 1:
+            raise ValueError(f"tile_vertices must be a whole number >= 1 "
+                             f"for a trace schedule, got {tile_vertices!r}")
+        if cap in self._schedules:
+            return self._schedules[cap]
+        V = self.n_nodes
+        n_tiles = -(-V // cap)
+        K = -(-V // n_tiles)
+        boundaries = np.minimum(np.arange(n_tiles + 1, dtype=np.int64) * K, V)
+        vertex_counts = np.diff(boundaries).astype(np.float64)
+        # Per-tile destination edges: CSR row pointer at the boundaries.
+        edge_counts = np.diff(self.row_ptr[boundaries]).astype(np.float64)
+        dst_tile = self.receivers // K
+        src_tile = self.senders // K
+        remote = src_tile != dst_tile
+        remote_edge_counts = np.bincount(
+            dst_tile[remote], minlength=n_tiles).astype(np.float64)
+        # Reference multiplicity of every (tile, source) pair — one dedup
+        # of composite integer keys serves both the halo counts and the
+        # cache-hit ranking (the only O(E log E) pass in the schedule).
+        keys = dst_tile * np.int64(V) + self.senders
+        pairs, pair_count = np.unique(keys, return_counts=True)
+        pair_tile = (pairs // V).astype(np.int64)
+        # Unique remote sources per destination tile: pairs whose source
+        # lives in a different tile than the destination.
+        remote_pair = (pairs % V) // K != pair_tile
+        halo_counts = np.bincount(
+            pair_tile[remote_pair], minlength=n_tiles).astype(np.float64)
+        order = np.lexsort((-pair_count, pair_tile))
+        pair_tile = pair_tile[order]
+        pair_count = pair_count[order].astype(np.float64)
+        seg_start = np.searchsorted(pair_tile, np.arange(n_tiles))
+        pair_rank = np.arange(pair_tile.size) - seg_start[pair_tile]
+        sched = TraceSchedule(
+            n_tiles=int(n_tiles), capacity=cap, K=int(K),
+            vertex_counts=vertex_counts, edge_counts=edge_counts,
+            halo_counts=halo_counts, remote_edge_counts=remote_edge_counts,
+            _pair_tile=pair_tile, _pair_count=pair_count,
+            _pair_rank=pair_rank)
+        self._schedules[cap] = sched
+        return sched
+
+
+# ---------------------------------------------------------------------------
+# Dataset registry: names a scenario file can reference, resolving to the
+# deterministic generators in repro.data.synthetic (pure data stays pure).
+# ---------------------------------------------------------------------------
+_TRACE_DATASETS: dict[str, Callable[..., GraphTrace]] = {}
+_TRACE_CACHE: dict[tuple, GraphTrace] = {}
+
+
+def register_trace_dataset(name: str, builder: Callable[..., GraphTrace], *,
+                           overwrite: bool = False) -> None:
+    """Register a named trace dataset builder (kwargs -> GraphTrace).
+
+    Builders must be deterministic in their parameters so a serialized
+    trace scenario replays bit-identically; anything random must be keyed
+    by an explicit ``seed`` parameter.
+    """
+    if not name or not isinstance(name, str):
+        raise ValueError(f"dataset name must be a non-empty string, got {name!r}")
+    if name in _TRACE_DATASETS and not overwrite:
+        raise ValueError(f"trace dataset {name!r} already registered "
+                         "(pass overwrite=True to replace)")
+    _TRACE_DATASETS[name] = builder
+    # Replacing a builder must invalidate any traces resolved under the
+    # old one, or resolve_trace_dataset would keep serving stale graphs.
+    for key in [k for k in _TRACE_CACHE if k[0] == name]:
+        del _TRACE_CACHE[key]
+
+
+def trace_dataset_names() -> tuple[str, ...]:
+    return tuple(sorted(_TRACE_DATASETS))
+
+
+def _cache_key(name: str, params: Mapping[str, Any]) -> tuple:
+    return (name, tuple(sorted(params.items())))
+
+
+def resolve_trace_dataset(name: str,
+                          params: Optional[Mapping[str, Any]] = None,
+                          ) -> GraphTrace:
+    """Build (or fetch from the in-process cache) a registered dataset."""
+    params = dict(params or {})
+    if name not in _TRACE_DATASETS:
+        raise KeyError(f"unknown trace dataset {name!r}; "
+                       f"registered: {list(trace_dataset_names())}")
+    key = _cache_key(name, params)
+    if key not in _TRACE_CACHE:
+        try:
+            _TRACE_CACHE[key] = _TRACE_DATASETS[name](**params)
+        except TypeError as exc:
+            raise ValueError(
+                f"bad parameters {sorted(params)} for trace dataset "
+                f"{name!r}: {exc}") from exc
+    return _TRACE_CACHE[key]
+
+
+def clear_trace_cache() -> None:
+    """Drop resolved traces (tests / long-lived services reclaiming memory)."""
+    _TRACE_CACHE.clear()
+
+
+def _power_law_trace(*, n_nodes, n_edges, seed=0, alpha=1.6) -> GraphTrace:
+    from repro.data import synthetic
+
+    ga = synthetic.power_law_graph(
+        int(seed), n_nodes=int(n_nodes), n_edges=int(n_edges), d_feat=1,
+        alpha=float(alpha), self_loops=False)
+    return GraphTrace.from_arrays(ga)
+
+
+def _cora_trace(*, seed=0, alpha=1.6) -> GraphTrace:
+    """Cora-sized deterministic power-law graph (V/E from the Cora config)."""
+    return _power_law_trace(n_nodes=CORA_V, n_edges=CORA_E,
+                            seed=int(seed), alpha=float(alpha))
+
+
+def _molecule_trace(*, batch=128, n_nodes=30, n_edges=64, seed=0,
+                    step=0) -> GraphTrace:
+    """A molecule batch as one block-diagonal disjoint-union graph."""
+    from repro.data import synthetic
+
+    b = synthetic.molecule_batch(int(seed), int(step), batch=int(batch),
+                                 n_nodes=int(n_nodes), n_edges=int(n_edges),
+                                 d_feat=1)
+    offsets = (np.arange(int(batch), dtype=np.int64) * int(n_nodes))[:, None]
+    snd = (b["senders"].astype(np.int64) + offsets).ravel()
+    rcv = (b["receivers"].astype(np.int64) + offsets).ravel()
+    return GraphTrace(snd, rcv, int(batch) * int(n_nodes))
+
+
+def _ring_of_tiles_trace(*, n_nodes, n_tiles) -> GraphTrace:
+    from repro.data import synthetic
+
+    ga = synthetic.ring_of_tiles_graph(n_nodes=int(n_nodes),
+                                       n_tiles=int(n_tiles))
+    return GraphTrace.from_arrays(ga)
+
+
+register_trace_dataset("power_law", _power_law_trace)
+register_trace_dataset("cora", _cora_trace)
+register_trace_dataset("molecule", _molecule_trace)
+register_trace_dataset("ring_of_tiles", _ring_of_tiles_trace)

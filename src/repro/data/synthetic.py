@@ -12,8 +12,8 @@ from typing import Optional
 
 import numpy as np
 
-__all__ = ["lm_batch", "power_law_graph", "criteo_batch", "molecule_batch",
-           "GraphArrays"]
+__all__ = ["lm_batch", "power_law_graph", "ring_of_tiles_graph",
+           "criteo_batch", "molecule_batch", "GraphArrays"]
 
 
 def _rng(seed: int, step: int) -> np.random.Generator:
@@ -51,6 +51,10 @@ def power_law_graph(seed: int, *, n_nodes: int, n_edges: int, d_feat: int,
                     self_loops: bool = True) -> GraphArrays:
     """Preferential-attachment-flavoured random graph: destination degrees
     follow a power law (the workload imbalance the paper highlights)."""
+    if n_nodes < 2 and n_edges > 0:
+        raise ValueError(
+            f"power_law_graph needs n_nodes >= 2 to draw self-loop-free "
+            f"edges (got n_nodes={n_nodes}, n_edges={n_edges})")
     r = _rng(seed, 0)
     # power-law weights over nodes for choosing edge endpoints
     w = (np.arange(1, n_nodes + 1, dtype=np.float64)) ** (-alpha)
@@ -58,9 +62,16 @@ def power_law_graph(seed: int, *, n_nodes: int, n_edges: int, d_feat: int,
     perm = r.permutation(n_nodes)
     senders = perm[r.choice(n_nodes, size=n_edges, p=w)]
     receivers = perm[r.choice(n_nodes, size=n_edges, p=w)]
-    # avoid self loops (equivariant-model contract; GCN re-adds them)
+    # avoid self loops (equivariant-model contract; GCN re-adds them): a
+    # clashing receiver is re-drawn as sender + uniform offset in
+    # [1, n_nodes), which can never land back on the sender.  (The old
+    # modular increment `receivers[clash] + 1` could only re-clash in the
+    # degenerate n_nodes == 1 case, but it also silently biased every
+    # clashing edge toward sender + 1; the re-draw removes both.)
     clash = senders == receivers
-    receivers[clash] = (receivers[clash] + 1) % n_nodes
+    if np.any(clash):
+        offsets = r.integers(1, n_nodes, size=int(clash.sum()))
+        receivers[clash] = (senders[clash] + offsets) % n_nodes
     if self_loops:
         senders = np.concatenate([senders, np.arange(n_nodes)])
         receivers = np.concatenate([receivers, np.arange(n_nodes)])
@@ -68,6 +79,45 @@ def power_law_graph(seed: int, *, n_nodes: int, n_edges: int, d_feat: int,
     labels = r.integers(0, n_classes, n_nodes).astype(np.int32)
     return GraphArrays(senders.astype(np.int32), receivers.astype(np.int32),
                        feat, labels)
+
+
+def ring_of_tiles_graph(*, n_nodes: int, n_tiles: int,
+                        d_feat: int = 1) -> GraphArrays:
+    """Perfectly uniform ring-of-tiles graph: the fixture on which the
+    composition layer's uniform-tile approximation is *exact*.
+
+    With ``K = n_nodes / n_tiles`` (``n_tiles`` must divide ``n_nodes``),
+    every vertex ``i`` receives one local ring edge (its predecessor
+    within the tile, cyclically) plus one edge from the vertex ``t * K``
+    positions behind it for every ``t in 1..n_tiles-1`` — i.e. exactly one
+    source in every other tile.  Under the balanced contiguous partition
+    into ``n_tiles`` tiles this gives every tile identical ``K`` vertices,
+    ``P = K * n_tiles`` edges, a remote fraction of exactly
+    ``1 - 1/n_tiles`` (the paper's random-partition expected cut), and
+    all remote sources distinct (halo dedup is trivial) — so the exact
+    trace schedule and the uniform closed form must agree bit for bit
+    (pinned in tests).  Deterministic; no self loops (needs ``K >= 2``).
+    """
+    if n_tiles < 1 or n_nodes % n_tiles:
+        raise ValueError(f"n_tiles must divide n_nodes for a uniform ring "
+                         f"(got n_nodes={n_nodes}, n_tiles={n_tiles})")
+    K = n_nodes // n_tiles
+    if K < 2:
+        raise ValueError(f"ring_of_tiles_graph needs >= 2 vertices per tile "
+                         f"to avoid self loops (got {K})")
+    i = np.arange(n_nodes, dtype=np.int64)
+    tile = i // K
+    local_src = (i - tile * K - 1) % K + tile * K   # in-tile ring predecessor
+    senders = [local_src]
+    receivers = [i]
+    for t in range(1, n_tiles):
+        senders.append((i - t * K) % n_nodes)       # one source per other tile
+        receivers.append(i)
+    snd = np.concatenate(senders).astype(np.int32)
+    rcv = np.concatenate(receivers).astype(np.int32)
+    feat = np.ones((n_nodes, d_feat), np.float32)
+    labels = np.zeros(n_nodes, np.int32)
+    return GraphArrays(snd, rcv, feat, labels)
 
 
 def criteo_batch(seed: int, step: int, *, batch: int, n_dense: int,

@@ -242,6 +242,22 @@ def test_workload_bridge_tile_language_mappings():
     assert s.graph["N"] == 128.0 and s.graph["T"] == 1.0
 
 
+def test_trace_kind_joins_the_front_door():
+    """The third graph kind (DESIGN.md §12) is a first-class scenario:
+    structural plan keys, templates, and hashing all treat it like tile
+    and full kinds (the deep battery lives in tests/test_trace.py)."""
+    s = Scenario.trace("engn", dataset="ring_of_tiles",
+                       params={"n_nodes": 64.0, "n_tiles": 2.0},
+                       N=8.0, T=4.0, tile_vertices=32.0)
+    assert s.graph_kind == "trace"
+    assert s.plan_key() != Scenario.full_graph(
+        "engn", V=64.0, E=128.0, N=8.0, T=4.0, tile_vertices=32.0).plan_key()
+    assert {s, Scenario.from_json(s.to_json())} == {s}
+    assert "cora_trace" in template_names()
+    r = evaluate_scenario(s)
+    assert r.n_tiles == 2.0 and "haloreload" in r.breakdown
+
+
 # ---------------------------------------------------------------------------
 # Satellite: registry scratch registration.
 # ---------------------------------------------------------------------------

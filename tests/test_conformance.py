@@ -14,6 +14,11 @@ import pytest
 
 jax = pytest.importorskip("jax")
 
+# Kernel-compiling battery: the whole module carries the `slow` marker so
+# the fast inner loop (`pytest -m "not slow"`) skips the compiles while the
+# default tier-1 run keeps them.
+pytestmark = pytest.mark.slow
+
 from repro.core import registry
 from repro.core.conformance import (ConformanceRecord, OperatingPoint,
                                     conformance_records,
