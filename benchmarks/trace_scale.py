@@ -1,0 +1,241 @@
+"""Trace-scheduling scale benchmark: ``PYTHONPATH=src python -m benchmarks.trace_scale``.
+
+Times the DESIGN.md §13 amortized multi-capacity trace engine against the
+PR-4 per-capacity reference (one ``np.unique`` sort per capacity) on
+streaming power-law graphs from 10⁵ to 10⁷ edges, across a 16-point
+power-of-two tile-capacity sweep — the sweep shape the paper's
+comparative question actually asks for.  For every operating point it
+verifies the amortized schedules **bit-identical** to the reference
+(where the reference is affordable) plus the structural invariants
+(vertex/edge count conservation, ``n_tiles = ceil(V / cap)``), and exits
+non-zero on any drift — the CI ``trace-scale-smoke`` gate.
+
+Outputs one row per edge count (wall times, speedup, edges/sec) and with
+``--json`` writes ``BENCH_trace_scale.json`` for PR-over-PR diffing.
+``--smoke`` runs a ≤30 s budget (small graphs, reference everywhere);
+the full run schedules a 10⁷-edge graph end-to-end on CPU (reference
+skipped above ``--ref-max-edges``).  When the on-disk schedule cache is
+enabled (``REPRO_TRACE_CACHE``), the benchmark also records cold-vs-warm
+``resolve_trace_dataset`` times for the largest graph.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import time
+
+import numpy as np
+
+
+def _pow2_caps(n_nodes: int, points: int) -> list[int]:
+    """Capacities n_nodes/2, n_nodes/4, ... — ``points`` distinct values."""
+    caps: list[int] = []
+    i = 1
+    while len(caps) < points:
+        cap = max(1, n_nodes >> i)
+        if caps and cap == caps[-1]:
+            break  # graph too small for more distinct points
+        caps.append(cap)
+        i += 1
+    return caps
+
+
+def _check_schedules(trace, caps, scheds, refs=None) -> list[str]:
+    """Drift gate: structural invariants + bit-parity vs the reference."""
+    errors = []
+    for cap, sched in zip(caps, scheds):
+        n_tiles = -(-trace.n_nodes // cap)
+        if sched.n_tiles != n_tiles:
+            errors.append(f"cap={cap}: n_tiles {sched.n_tiles} != {n_tiles}")
+        if int(sched.vertex_counts.sum()) != trace.n_nodes:
+            errors.append(f"cap={cap}: vertex counts sum "
+                          f"{int(sched.vertex_counts.sum())} != V")
+        if int(sched.edge_counts.sum()) != trace.n_edges:
+            errors.append(f"cap={cap}: edge counts sum "
+                          f"{int(sched.edge_counts.sum())} != E")
+    if refs is not None:
+        for cap, sched, ref in zip(caps, scheds, refs):
+            for f in ("vertex_counts", "edge_counts", "halo_counts",
+                      "remote_edge_counts"):
+                if not np.array_equal(getattr(sched, f), getattr(ref, f)):
+                    errors.append(f"cap={cap}: {f} drifted from the "
+                                  "per-capacity reference")
+    return errors
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--json", nargs="?", const="BENCH_trace_scale.json",
+                    default=None, metavar="PATH",
+                    help="also write a summary JSON "
+                         "(default BENCH_trace_scale.json)")
+    ap.add_argument("--smoke", action="store_true",
+                    help="small-budget CI mode (~seconds, reference "
+                         "everywhere)")
+    ap.add_argument("--edges", default=None,
+                    help="comma-separated edge counts (overrides the "
+                         "smoke/full defaults)")
+    ap.add_argument("--edge-factor", type=int, default=10,
+                    help="edges per vertex (n_nodes = n_edges // factor)")
+    ap.add_argument("--points", type=int, default=16,
+                    help="capacity-sweep points (powers of two)")
+    ap.add_argument("--ref-max-edges", type=int, default=2_000_000,
+                    help="largest graph to run the per-capacity reference "
+                         "on (it is the slow path being replaced)")
+    ap.add_argument("--engine", choices=("numpy", "jax"), default="numpy",
+                    help="amortized engine to time (jax = jitted "
+                         "segment-sum path)")
+    ap.add_argument("--repeats", type=int, default=5,
+                    help="cold repetitions per timing; the minimum is "
+                         "reported (steadies the wall clock against "
+                         "scheduler noise)")
+    ap.add_argument("--alpha", type=float, default=1.6)
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args(argv)
+
+    from repro.core import schedule_cache
+    from repro.core.trace import (GraphTrace, clear_trace_cache,
+                                  resolve_trace_dataset)
+    from repro.data import synthetic
+
+    if args.edges is not None:
+        edge_counts = [int(e) for e in args.edges.split(",")]
+    elif args.smoke:
+        edge_counts = [100_000, 300_000]
+    else:
+        edge_counts = [100_000, 1_000_000, 10_000_000]
+
+    rows = []
+    failures: list[str] = []
+    for n_edges in edge_counts:
+        n_nodes = max(2, n_edges // args.edge_factor)
+        caps = _pow2_caps(n_nodes, args.points)
+
+        t0 = time.perf_counter()
+        snd, rcv = synthetic.power_law_edges(
+            args.seed, n_nodes=n_nodes, n_edges=n_edges, alpha=args.alpha)
+        t_generate = time.perf_counter() - t0
+
+        t0 = time.perf_counter()
+        trace = GraphTrace(snd, rcv, n_nodes)
+        t_csr = time.perf_counter() - t0
+
+        # Amortized engine, cold each repeat (a fresh trace drops the
+        # shared factorization and schedule LRU, so every repetition pays
+        # the one shared sort); minimum of the repeats is reported.
+        repeats = max(1, args.repeats)
+        t_amortized = None
+        scheds = None
+        for _ in range(repeats):
+            cold = GraphTrace(snd, rcv, n_nodes)
+            t0 = time.perf_counter()
+            scheds = cold.schedules(caps, engine=args.engine)
+            dt = time.perf_counter() - t0
+            t_amortized = dt if t_amortized is None else min(t_amortized, dt)
+
+        run_reference = n_edges <= args.ref_max_edges
+        refs = None
+        t_reference = None
+        if run_reference:
+            for _ in range(repeats):
+                t0 = time.perf_counter()
+                refs = [trace.schedule_reference(c) for c in caps]
+                dt = time.perf_counter() - t0
+                t_reference = (dt if t_reference is None
+                               else min(t_reference, dt))
+
+        errors = _check_schedules(trace, caps, scheds, refs)
+        failures.extend(f"E={n_edges}: {e}" for e in errors)
+
+        row = {
+            "n_edges": n_edges,
+            "n_nodes": n_nodes,
+            "n_capacities": len(caps),
+            "capacities": caps,
+            "engine": args.engine,
+            "t_generate_s": t_generate,
+            "t_csr_s": t_csr,
+            "t_amortized_sweep_s": t_amortized,
+            "t_reference_sweep_s": t_reference,
+            "speedup_vs_reference": (None if t_reference is None
+                                     else t_reference / t_amortized),
+            "edges_per_sec": n_edges * len(caps) / t_amortized,
+            "drift_errors": errors,
+        }
+        rows.append(row)
+        ref_txt = ("-" if t_reference is None
+                   else f"{t_reference:8.3f}s  {row['speedup_vs_reference']:6.1f}x")
+        print(f"E={n_edges:>9}  V={n_nodes:>8}  caps={len(caps):>2}  "
+              f"gen={t_generate:6.2f}s  new={t_amortized:8.3f}s  "
+              f"old/ratio={ref_txt}  "
+              f"{row['edges_per_sec']:.3g} edges/s"
+              + ("  DRIFT" if errors else ""))
+
+    # Disk-cache round trip for the largest graph (only when the cache is
+    # enabled and the graph clears the min-edges threshold).  The demo
+    # runs against a scratch directory so the "cold" resolve is genuinely
+    # cold on every invocation — a user/CI cache dir would already hold
+    # the entry from a previous run and silently report warm-as-cold.
+    disk = {"enabled": schedule_cache.cache_root() is not None,
+            "min_edges": schedule_cache.min_cached_edges()}
+    biggest = max(edge_counts)
+    if disk["enabled"] and biggest >= disk["min_edges"]:
+        import os
+        import shutil
+        import tempfile
+
+        params = {"n_nodes": max(2, biggest // args.edge_factor),
+                  "n_edges": biggest, "seed": args.seed,
+                  "alpha": args.alpha}
+        scratch = tempfile.mkdtemp(prefix="trace-scale-cache-")
+        saved = os.environ.get("REPRO_TRACE_CACHE")
+        os.environ["REPRO_TRACE_CACHE"] = scratch
+        try:
+            clear_trace_cache()
+            t0 = time.perf_counter()
+            resolve_trace_dataset("power_law_stream", params)
+            disk["resolve_cold_s"] = time.perf_counter() - t0
+            clear_trace_cache()
+            t0 = time.perf_counter()
+            resolve_trace_dataset("power_law_stream", params)
+            disk["resolve_warm_s"] = time.perf_counter() - t0
+            clear_trace_cache()
+        finally:
+            if saved is None:
+                os.environ.pop("REPRO_TRACE_CACHE", None)
+            else:
+                os.environ["REPRO_TRACE_CACHE"] = saved
+            shutil.rmtree(scratch, ignore_errors=True)
+        print(f"disk cache: resolve cold {disk['resolve_cold_s']:.3f}s "
+              f"-> warm {disk['resolve_warm_s']:.3f}s (scratch dir)")
+
+    if args.json is not None:
+        payload = {
+            "benchmark": "trace_scale",
+            "smoke": bool(args.smoke),
+            "engine": args.engine,
+            "repeats": max(1, args.repeats),
+            "points": args.points,
+            "edge_factor": args.edge_factor,
+            "alpha": args.alpha,
+            "seed": args.seed,
+            "disk_cache": disk,
+            "rows": rows,
+            "drift_failures": failures,
+        }
+        with open(args.json, "w") as f:
+            json.dump(payload, f, indent=2, sort_keys=True)
+            f.write("\n")
+        print(f"# wrote {args.json}")
+
+    if failures:
+        print("# SCHEDULE DRIFT DETECTED:")
+        for e in failures:
+            print(f"#   {e}")
+        return 1
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

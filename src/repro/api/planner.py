@@ -188,8 +188,9 @@ def _group_model(spec, scenarios: Sequence[Scenario], trace=None):
     """The (possibly composed) model shared by one plan group.
 
     ``trace`` (resolved once per group) switches the tiled model onto the
-    exact edge-list schedule; its tile capacity is structural (part of the
-    plan key), so it is taken as a scalar, not stacked.
+    exact edge-list schedule; tile capacities stack along the capacity
+    axis (DESIGN.md §13), so same-dataset scenarios differing only in
+    ``tile_vertices`` share this one evaluation.
     """
     comp = scenarios[0].composition
     if comp is None:
@@ -202,8 +203,11 @@ def _group_model(spec, scenarios: Sequence[Scenario], trace=None):
         inner = MultiLayerModel(spec, widths, residency=comp.residency)
     if comp.tile_vertices is not None:
         if trace is not None:
-            return TiledGraphModel(inner, tile_vertices=comp.tile_vertices,
-                                   trace=trace)
+            return TiledGraphModel(
+                inner,
+                tile_vertices=_stack(s.composition.tile_vertices
+                                     for s in scenarios),
+                trace=trace)
         return TiledGraphModel(
             inner,
             tile_vertices=_stack(s.composition.tile_vertices

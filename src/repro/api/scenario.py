@@ -430,17 +430,19 @@ class Scenario:
         values, hardware override values, widths values, tile capacities),
         all of which stack along one batch axis for a single broadcast
         evaluation (DESIGN.md §11).  For trace scenarios the dataset
-        reference and the tile capacity are structural too: they fix the
-        concrete edge list and the tile-axis length, so only scenarios
-        sharing both can join one exact-schedule evaluation.
+        reference is structural too (it fixes the concrete edge list),
+        but the tile capacity is **not** (DESIGN.md §13): same-dataset
+        trace scenarios differing only in ``tile_vertices`` stack along
+        the capacity axis of one exact-schedule evaluation, every
+        capacity's schedule amortized over one shared edge-list
+        factorization.
         """
         comp = None if self.composition is None else self.composition.signature()
         key = (self.dataflow, self.graph_kind,
                tuple(sorted(self.hardware)), comp)
         if self.graph_kind == "trace":
             key += (self.graph["dataset"],
-                    tuple(sorted(self.graph["params"].items())),
-                    self.composition.tile_vertices)
+                    tuple(sorted(self.graph["params"].items())))
         return key
 
     # -- serialization ----------------------------------------------------

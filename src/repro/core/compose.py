@@ -45,6 +45,13 @@ __all__ = [
 
 RESIDENCY_POLICIES = ("spill", "resident")
 
+#: Tile-axis chunk for the capacity-batched trace evaluation.  MUST stay a
+#: power of two: the pairwise reduction tree then decomposes into aligned
+#: subtrees, so chunked partial sums combine bit-identically to one
+#: unchunked pairwise pass (and to every per-capacity pass) while peak
+#: memory stays O(batch x chunk) per term instead of O(batch x n_tiles).
+TRACE_TILE_CHUNK = 1 << 16
+
 
 def _f64(x) -> np.ndarray:
     return np.asarray(x, dtype=np.float64)
@@ -230,10 +237,15 @@ class TiledGraphModel:
     one broadcast call over a trailing tile axis, and ``haloreload``
     charges the exact per-tile **unique**-remote-source counts, so
     ``halo_dedup`` must stay 1 (the dedup is measured, not estimated).
-    With a trace, ``tile_vertices`` must be a scalar (the tile axis length
-    is a structural property, not a sweepable leaf); other parameters may
-    still be arrays, carried on axes *before* the tile axis (the scenario
-    planner stacks batches that way automatically).
+    With a trace, ``tile_vertices`` may be a scalar (one schedule, tile
+    axis trailing) or a 1-D array of capacities — the **capacity axis**
+    (DESIGN.md §13): entry ``b`` evaluates the exact schedule of capacity
+    ``tile_vertices[b]``, all schedules amortized over one shared
+    edge-list factorization, with the per-capacity tile axes padded to a
+    common length, masked, and reduced chunk-by-chunk with the same
+    pairwise tree — bit-identical to evaluating each capacity alone.
+    Other array leaves must broadcast against the capacity axis (the
+    scenario planner stacks batches exactly that way).
     """
 
     def __init__(self, inner, *, tile_vertices: ParamArray = 1024,
@@ -261,11 +273,12 @@ class TiledGraphModel:
             if not isinstance(trace, GraphTrace):
                 raise TypeError(f"trace must be a GraphTrace, "
                                 f"got {type(trace).__name__}")
-            if tv.ndim != 0:
+            if tv.ndim > 1:
                 raise ValueError(
-                    "a trace schedule needs a scalar tile_vertices: the "
-                    "tile count is structural (it sets the tile axis "
-                    "length), so capacities cannot sweep as an array")
+                    "tile capacities with a trace must be a scalar or a "
+                    "1-D array (one capacity per batch member): the "
+                    "capacity axis becomes the leading batch axis of the "
+                    "evaluation (DESIGN.md §13)")
             if np.any(hd != 1.0):
                 raise ValueError(
                     "halo_dedup must be 1 with a trace: the exact schedule "
@@ -315,6 +328,80 @@ class TiledGraphModel:
               if getattr(hw, f.name) is not None}
         return hw.replace(**kw)
 
+    def _evaluate_trace_multi(self, full: FullGraphParams, hw) -> ModelOutput:
+        """Capacity-axis evaluation: one batched call over B capacities.
+
+        Every capacity's exact schedule comes from the trace's shared
+        sorted-edge factorization (one sort for the whole sweep); the
+        per-capacity tile axes are right-padded to the longest, masked
+        (padded tiles contribute exactly 0.0), and reduced in
+        power-of-two chunks with the same pairwise tree — so row ``b``
+        is bit-identical to a scalar-capacity evaluation at
+        ``tile_vertices[b]`` (pinned in tests, DESIGN.md §13).
+        """
+        tr = self.trace
+        caps = np.asarray(self.tile_vertices)
+        scheds = tr.schedules([c for c in caps.tolist()])
+        B = len(scheds)
+        M = max(s.n_tiles for s in scheds)
+        K_pad = np.zeros((B, M), dtype=np.float64)
+        P_pad = np.zeros((B, M), dtype=np.float64)
+        mask = np.zeros((B, M), dtype=np.float64)
+        for b, s in enumerate(scheds):
+            m = s.n_tiles
+            K_pad[b, :m] = s.vertex_counts
+            P_pad[b, :m] = s.edge_counts
+            mask[b, :m] = 1.0
+        N = _f64(full.N)[..., None]
+        T = _f64(full.T)[..., None]
+        hdf = _f64(full.high_degree_fraction)[..., None]
+        inner = self._promoted_inner()
+        phw = self._promoted_hw(hw)
+        order: list[tuple[str, str]] = []
+        partial_bits: dict[tuple[str, str], list] = {}
+        partial_iters: dict[tuple[str, str], list] = {}
+        for start in range(0, M, TRACE_TILE_CHUNK):
+            sl = slice(start, start + TRACE_TILE_CHUNK)
+            K_c = K_pad[:, sl]
+            tile_c = GraphTileParams(N=N, T=T, K=K_c,
+                                     L=np.floor(K_c * hdf), P=P_pad[:, sl])
+            out_c = inner.evaluate(tile_c, phw)
+            m_c = mask[:, sl]
+            for t in out_c.terms:
+                key = (t.name, t.hierarchy)
+                if key not in partial_bits:
+                    order.append(key)
+                    partial_bits[key] = []
+                    partial_iters[key] = []
+                # The mask multiply zeroes padded tiles exactly (the
+                # closed forms never divide by a graph field, so padded
+                # values are finite) and is the identity on real tiles.
+                partial_bits[key].append(
+                    _pairwise_sum(_f64(t.data_bits) * m_c))
+                partial_iters[key].append(
+                    _pairwise_sum(_f64(t.iterations) * m_c))
+        terms = [
+            MovementTerm(name, hier,
+                         _pairwise_sum(np.stack(partial_bits[(name, hier)],
+                                                axis=-1)),
+                         _pairwise_sum(np.stack(partial_iters[(name, hier)],
+                                                axis=-1)))
+            for name, hier in order]
+        width = self._halo_width()
+        if width is None:
+            width = _f64(full.N)
+        halo_totals = _f64([s.halo_total for s in scheds])
+        halo_bits = halo_totals * width * _f64(hw.sigma)
+        halo_iters = ceil(halo_bits / _f64(hw.B))
+        terms.append(MovementTerm("haloreload", "L2-L1", halo_bits, halo_iters))
+        return ModelOutput(
+            accelerator=self.name,
+            terms=tuple(terms),
+            meta={"hw": hw, "graph": full,
+                  "n_tiles": _f64([s.n_tiles for s in scheds]),
+                  "schedules": scheds, "inner": self.inner, "trace": tr},
+        )
+
     def _evaluate_trace(self, full: FullGraphParams, hw) -> ModelOutput:
         hw = self.resolve_hw(hw)
         tr = self.trace
@@ -324,6 +411,8 @@ class TiledGraphModel:
                 f"match the trace (V={tr.n_nodes}, E={tr.n_edges}); a trace "
                 "schedule is exact, so the declared graph must be the "
                 "traced graph")
+        if np.asarray(self.tile_vertices).ndim == 1:
+            return self._evaluate_trace_multi(full, hw)
         sched = tr.schedule(self.tile_vertices)
         m = sched.n_tiles
         # Tile axis is the LAST axis: every non-tile numeric leaf gets a

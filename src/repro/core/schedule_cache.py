@@ -1,0 +1,240 @@
+"""Content-addressed on-disk cache for trace graphs and tile schedules.
+
+Repeated CLI / CI invocations of the trace backend (DESIGN.md §13) used
+to regenerate every synthetic graph and re-derive every tile schedule
+from scratch — at 10⁷ edges that is tens of seconds of pure recompute
+per process.  This module gives :mod:`repro.core.trace` a small
+content-addressed store:
+
+* **Graphs** — the edge list plus the two sort factorizations a
+  :class:`~repro.core.trace.GraphTrace` derives at construction (the
+  dst-CSR order and the global ``(sender, receiver)`` lexsort), keyed by
+  ``sha256({dataset, canonical params, cache token, format version})``.
+* **Schedules** — the per-tile count arrays of one
+  :class:`~repro.core.trace.TraceSchedule` (vertex / edge / halo / cut
+  counts; O(n_tiles), tiny), keyed by the graph identity plus the tile
+  capacity.  The ranked-pair cache-hit data is *not* stored — it is
+  O(unique pairs) large and recomputed lazily from the trace on demand.
+
+Only dataset builders registered with an explicit ``cache_token`` take
+part (the token is the builder's manual version stamp: bumping it
+invalidates every cached artifact of that dataset), so throwaway
+in-memory datasets (``trace_scenarios_from_graph``, tests) can never be
+served stale bytes.  Entries are written atomically (`os.replace`) and
+are plain ``.npz`` files — safe to delete at any time.
+
+Configuration (read per call, so tests can monkeypatch):
+
+* ``REPRO_TRACE_CACHE`` — cache directory; ``0`` / ``off`` / empty
+  disables; unset defaults to ``~/.cache/repro-trace``.
+* ``REPRO_TRACE_CACHE_MIN_EDGES`` — smallest edge count worth a disk
+  round trip (default 200000; small graphs rebuild faster than they
+  deserialize).
+"""
+
+from __future__ import annotations
+
+import hashlib
+import json
+import os
+import tempfile
+from pathlib import Path
+from typing import Any, Mapping, Optional
+
+import numpy as np
+
+__all__ = [
+    "cache_root",
+    "min_cached_edges",
+    "graph_cache_key",
+    "schedule_cache_key",
+    "load_graph",
+    "store_graph",
+    "load_schedule",
+    "store_schedule",
+]
+
+#: Bump when the on-disk layout of either artifact kind changes.
+FORMAT_VERSION = 1
+
+_DEFAULT_ROOT = "~/.cache/repro-trace"
+_DEFAULT_MIN_EDGES = 200_000
+_DISABLED = {"", "0", "off", "none", "disabled"}
+
+
+def cache_root() -> Optional[Path]:
+    """The cache directory, or None when disk caching is disabled."""
+    raw = os.environ.get("REPRO_TRACE_CACHE")
+    if raw is None:
+        raw = _DEFAULT_ROOT
+    if raw.strip().lower() in _DISABLED:
+        return None
+    return Path(raw).expanduser()
+
+
+def min_cached_edges() -> int:
+    raw = os.environ.get("REPRO_TRACE_CACHE_MIN_EDGES")
+    if raw is None:
+        return _DEFAULT_MIN_EDGES
+    try:
+        return max(0, int(raw))
+    except ValueError:
+        return _DEFAULT_MIN_EDGES
+
+
+def _digest(payload: Mapping[str, Any]) -> str:
+    blob = json.dumps(payload, sort_keys=True, separators=(",", ":"))
+    return hashlib.sha256(blob.encode()).hexdigest()
+
+
+def graph_cache_key(dataset: str, canonical_params: str, token: str) -> str:
+    return _digest({"kind": "graph", "dataset": dataset,
+                    "params": canonical_params, "token": token,
+                    "format": FORMAT_VERSION})
+
+
+def schedule_cache_key(dataset: str, canonical_params: str, token: str,
+                       capacity: int) -> str:
+    return _digest({"kind": "schedule", "dataset": dataset,
+                    "params": canonical_params, "token": token,
+                    "capacity": int(capacity), "format": FORMAT_VERSION})
+
+
+def _path_for(key: str) -> Optional[Path]:
+    root = cache_root()
+    if root is None:
+        return None
+    return root / key[:2] / f"{key}.npz"
+
+
+def _atomic_savez(path: Path, **arrays) -> None:
+    path.parent.mkdir(parents=True, exist_ok=True)
+    fd, tmp = tempfile.mkstemp(dir=path.parent, suffix=".tmp")
+    try:
+        with os.fdopen(fd, "wb") as f:
+            np.savez(f, **arrays)
+        os.replace(tmp, path)
+    except BaseException:
+        try:
+            os.unlink(tmp)
+        except OSError:
+            pass
+        raise
+
+
+def _load_npz(key: str) -> Optional[dict]:
+    path = _path_for(key)
+    if path is None or not path.is_file():
+        return None
+    try:
+        with np.load(path, allow_pickle=False) as z:
+            return {name: z[name] for name in z.files}
+    except (OSError, ValueError, KeyError):
+        # A torn or foreign file is a miss, never an error; drop it so the
+        # next store rewrites a clean entry.
+        try:
+            path.unlink()
+        except OSError:
+            pass
+        return None
+
+
+def _compact_int(a: np.ndarray) -> np.ndarray:
+    """int64 -> int32 when the values fit (halves cache size and load time)."""
+    a = np.asarray(a)
+    if a.dtype == np.int64 and (a.size == 0
+                                or (a.min() >= np.iinfo(np.int32).min
+                                    and a.max() <= np.iinfo(np.int32).max)):
+        return a.astype(np.int32)
+    return a
+
+
+# -- graphs -----------------------------------------------------------------
+def load_graph(key: str) -> Optional[dict]:
+    """Stored edge list + factorizations, or None on miss.
+
+    The four contract arrays come back int64 (the ``GraphTrace``
+    invariant); the unique-pair factorization keeps its compact on-disk
+    dtype (it is the bandwidth-critical operand of every per-capacity
+    pass) except the multiplicity prefix, which is int64 by contract.
+    """
+    d = _load_npz(key)
+    if d is None or "senders" not in d or "n_nodes" not in d:
+        return None
+    out = {"n_nodes": int(d["n_nodes"])}
+    for name in ("senders", "receivers", "csr_senders", "row_ptr"):
+        if name in d:
+            out[name] = d[name].astype(np.int64, copy=False)
+    for name in ("fact_u_snd", "fact_u_rcv"):
+        if name in d:
+            out[name] = d[name]
+    if "fact_mult_prefix" in d:
+        out["fact_mult_prefix"] = d["fact_mult_prefix"].astype(
+            np.int64, copy=False)
+    return out
+
+
+def store_graph(key: str, *, n_nodes: int, senders, receivers,
+                csr_senders, row_ptr, fact_u_snd=None, fact_u_rcv=None,
+                fact_mult_prefix=None) -> bool:
+    path = _path_for(key)
+    if path is None:
+        return False
+    arrays = {
+        "n_nodes": np.asarray(int(n_nodes), dtype=np.int64),
+        "senders": _compact_int(senders),
+        "receivers": _compact_int(receivers),
+        "csr_senders": _compact_int(csr_senders),
+        "row_ptr": _compact_int(row_ptr),
+    }
+    if (fact_u_snd is not None and fact_u_rcv is not None
+            and fact_mult_prefix is not None):
+        arrays["fact_u_snd"] = np.asarray(fact_u_snd)
+        arrays["fact_u_rcv"] = np.asarray(fact_u_rcv)
+        arrays["fact_mult_prefix"] = _compact_int(fact_mult_prefix)
+    try:
+        _atomic_savez(path, **arrays)
+    except OSError:
+        return False
+    return True
+
+
+# -- schedules --------------------------------------------------------------
+_SCHEDULE_FIELDS = ("vertex_counts", "edge_counts", "halo_counts",
+                    "remote_edge_counts")
+
+
+def load_schedule(key: str) -> Optional[dict]:
+    """Stored per-tile count arrays (float64) plus n_tiles/capacity/K."""
+    d = _load_npz(key)
+    if d is None or any(f not in d for f in _SCHEDULE_FIELDS):
+        return None
+    out = {f: d[f].astype(np.float64, copy=False) for f in _SCHEDULE_FIELDS}
+    for scalar in ("n_tiles", "capacity", "K"):
+        if scalar not in d:
+            return None
+        out[scalar] = int(d[scalar])
+    return out
+
+
+def store_schedule(key: str, *, n_tiles: int, capacity: int, K: int,
+                   vertex_counts, edge_counts, halo_counts,
+                   remote_edge_counts) -> bool:
+    path = _path_for(key)
+    if path is None:
+        return False
+    try:
+        _atomic_savez(
+            path,
+            n_tiles=np.asarray(int(n_tiles), dtype=np.int64),
+            capacity=np.asarray(int(capacity), dtype=np.int64),
+            K=np.asarray(int(K), dtype=np.int64),
+            vertex_counts=np.asarray(vertex_counts, dtype=np.float64),
+            edge_counts=np.asarray(edge_counts, dtype=np.float64),
+            halo_counts=np.asarray(halo_counts, dtype=np.float64),
+            remote_edge_counts=np.asarray(remote_edge_counts,
+                                          dtype=np.float64),
+        )
+    except OSError:
+        return False
+    return True

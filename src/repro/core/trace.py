@@ -7,10 +7,11 @@ cut `E * (1 - 1/n_tiles)`.  Its own narrative (echoed by the GNN computing
 surveys in PAPERS.md) is that real-world degree imbalance is what actually
 drives communication, yet the closed forms never touch an actual graph.
 
-This module closes that gap (DESIGN.md §12).  A :class:`GraphTrace` wraps
-one concrete edge list (CSR-ified by destination vertex) and derives, for
-a balanced contiguous vertex partition, the **exact** quantities the
-uniform schedule approximates:
+This module closes that gap (DESIGN.md §12) and keeps it fast at paper
+scale (DESIGN.md §13).  A :class:`GraphTrace` wraps one concrete edge
+list (CSR-ified by destination vertex) and derives, for a balanced
+contiguous vertex partition, the **exact** quantities the uniform
+schedule approximates:
 
 * per-tile vertex counts ``K_t`` and destination-edge counts ``P_t``
   (straight from the CSR row pointer — no per-edge Python loop anywhere);
@@ -20,6 +21,23 @@ uniform schedule approximates:
 * degree-aware cache hit fractions: the share of a tile's aggregation
   reads served if the L most-referenced sources of the tile pass are
   pinned in a dedicated cache (EnGN's L2* narrative, measured).
+
+**Amortized multi-capacity engine (§13).**  Because every tile is a
+contiguous receiver range, ``dst_tile = receiver // K`` is monotone in
+the receiver for *every* capacity.  One global sender-major sort (an
+in-place composite-key ``np.sort``) — performed once per trace and
+collapsed to the unique ``(sender, receiver)`` pairs with an
+edge-multiplicity prefix — makes the deduplicated ``(dst_tile, source)``
+pairs of any capacity appear as single contiguous runs (tile monotone
+within each sender segment), so a capacity sweep costs **one sort plus
+one O(U) boundary-flag pass per capacity** (U = unique pairs) instead
+of a fresh ``np.unique`` sort each time.
+:meth:`GraphTrace.schedules` batches a whole capacity sweep;
+:meth:`GraphTrace.schedule_reference` keeps the per-capacity PR-4
+``np.unique`` algorithm as the bit-exactness oracle.  A jitted JAX
+engine (``engine="jax"``, :mod:`repro.kernels.segment_reduce`, with a
+Pallas segment-reduce kernel) and a content-addressed on-disk cache
+(:mod:`repro.core.schedule_cache`) ride on the same factorization.
 
 :class:`~repro.core.compose.TiledGraphModel` accepts a trace as an
 alternative schedule source; the scenario front door exposes it as the
@@ -31,8 +49,11 @@ scenarios stay pure, serializable data.
 
 from __future__ import annotations
 
+import functools
+import json
+from collections import OrderedDict
 from dataclasses import dataclass, field
-from typing import Any, Callable, Mapping, Optional
+from typing import Any, Callable, Mapping, Optional, Sequence
 
 import numpy as np
 
@@ -43,6 +64,8 @@ __all__ = [
     "resolve_trace_dataset",
     "trace_dataset_names",
     "clear_trace_cache",
+    "set_trace_cache_budget",
+    "trace_cache_info",
     "CORA_V",
     "CORA_E",
 ]
@@ -51,6 +74,8 @@ __all__ = [
 #: ["full_graph_sm"]`` and the gcn-cora config; asserted in tests).
 CORA_V = 2708
 CORA_E = 10556
+
+_ENGINES = ("numpy", "jax")
 
 
 def _f64(x) -> np.ndarray:
@@ -76,6 +101,13 @@ class TraceSchedule:
         (the halo features a tile pass must fetch from other tiles).
       remote_edge_counts: ``(n_tiles,)`` cut edges per destination tile
         (before dedup; ``halo_counts <= remote_edge_counts``).
+
+    The ranked per-(tile, source) reference multiplicities behind
+    :meth:`cache_hit_fraction` are O(unique pairs) large and only needed
+    for cache statistics, so they are derived lazily from
+    ``_pair_source`` (a callable returning ``(pair_tile, pair_count)``)
+    and memoized — disk-cached schedules rebuild them from the trace on
+    first use.
     """
 
     n_tiles: int
@@ -85,11 +117,10 @@ class TraceSchedule:
     edge_counts: np.ndarray
     halo_counts: np.ndarray
     remote_edge_counts: np.ndarray
-    # Per-(tile, source) reference multiplicities, sorted by (tile,
-    # -count): the basis of the degree-aware cache-hit computation.
-    _pair_tile: np.ndarray = field(repr=False)
-    _pair_count: np.ndarray = field(repr=False)
-    _pair_rank: np.ndarray = field(repr=False)
+    _pair_source: Optional[Callable[[], tuple]] = field(
+        default=None, repr=False, compare=False)
+    _ranked_cache: Optional[tuple] = field(
+        default=None, repr=False, compare=False)
 
     @property
     def n_edges(self) -> int:
@@ -109,24 +140,64 @@ class TraceSchedule:
         """The paper's random-partition expected cut, ``E * (1 - 1/n_tiles)``."""
         return float(self.n_edges) * (1.0 - 1.0 / self.n_tiles)
 
-    def cache_hit_fraction(self, high_degree_fraction: float = 0.1) -> np.ndarray:
+    def counts_dict(self) -> dict:
+        """The integer count arrays (the disk-cache / parity payload)."""
+        return {"n_tiles": self.n_tiles, "capacity": self.capacity,
+                "K": self.K, "vertex_counts": self.vertex_counts,
+                "edge_counts": self.edge_counts,
+                "halo_counts": self.halo_counts,
+                "remote_edge_counts": self.remote_edge_counts}
+
+    def _ranked_pairs(self) -> tuple:
+        """(seg_ptr, prefix): per-tile segments of count-descending pairs.
+
+        Pairs are ranked by ``(tile asc, count desc, source asc)`` — the
+        exact order of the PR-4 reference — and reduced to a segment
+        pointer plus an inclusive int64 prefix sum, so the top-L cache
+        hits of *any* L are two gather-subtractions (all counts are
+        integers, so prefix differencing is exact).
+        """
+        cached = self._ranked_cache
+        if cached is None:
+            if self._pair_source is None:
+                raise RuntimeError(
+                    "this TraceSchedule carries no pair source; cache-hit "
+                    "statistics need the (tile, source) multiplicities")
+            pair_tile, pair_count = self._pair_source()
+            # Stable sort: ties in (tile, -count) keep the provider's
+            # source-ascending order, matching the np.unique reference.
+            order = np.lexsort((-pair_count, pair_tile))
+            pt = pair_tile[order]
+            pc = pair_count[order]
+            seg_ptr = np.searchsorted(pt, np.arange(self.n_tiles + 1))
+            prefix = np.zeros(pc.size + 1, dtype=np.int64)
+            np.cumsum(pc, out=prefix[1:])
+            cached = (seg_ptr.astype(np.int64), prefix)
+            object.__setattr__(self, "_ranked_cache", cached)
+        return cached
+
+    def cache_hit_fraction(self, high_degree_fraction=0.1) -> np.ndarray:
         """Exact per-tile degree-aware cache hit fractions.
 
         If tile ``t`` pins its ``L_t = floor(K_t * high_degree_fraction)``
         most-referenced source vertices in a dedicated cache (EnGN's L2*
         high-degree cache), this is the fraction of the tile's aggregation
         reads those sources serve — computed from the actual reference
-        multiplicities, vectorized over all tiles at once.
+        multiplicities.  ``high_degree_fraction`` may be a scalar or an
+        array of any shape; the result broadcasts to
+        ``hdf.shape + (n_tiles,)``, so hdf sweeps share one ranked-pair
+        factorization instead of recomputing per value.
         """
-        hdf = float(high_degree_fraction)
-        if not np.isfinite(hdf) or not 0.0 <= hdf <= 1.0:
+        hdf = _f64(high_degree_fraction)
+        if not np.all(np.isfinite(hdf)) or np.any(hdf < 0.0) or np.any(hdf > 1.0):
             raise ValueError(f"high_degree_fraction must be in [0, 1], "
                              f"got {high_degree_fraction!r}")
-        L_t = np.floor(self.vertex_counts * hdf)
-        hit = self._pair_rank < L_t[self._pair_tile]
-        hits = np.bincount(self._pair_tile[hit],
-                           weights=self._pair_count[hit],
-                           minlength=self.n_tiles)
+        seg_ptr, prefix = self._ranked_pairs()
+        seg_start = seg_ptr[:-1]
+        seg_len = np.diff(seg_ptr)
+        L = np.floor(self.vertex_counts * hdf[..., None]).astype(np.int64)
+        take = np.minimum(L, seg_len)
+        hits = (prefix[seg_start + take] - prefix[seg_start]).astype(np.float64)
         return hits / np.maximum(self.edge_counts, 1.0)
 
     def stats(self, high_degree_fraction: float = 0.1) -> dict:
@@ -156,11 +227,16 @@ class GraphTrace:
     ``senders[i] -> receivers[i]`` is edge ``i``; aggregation reads source
     (sender) features into destination (receiver) vertices, matching the
     destination-stationary tiling of the paper's dataflows.  Construction
-    sorts the edge list by destination once (the CSR row pointer), after
-    which every schedule quantity is segment algebra — ``np.bincount`` /
-    ``np.unique`` / ``np.lexsort`` over whole arrays, never a Python loop
-    over edges.
+    sorts the edge list by destination once (the CSR row pointer); the
+    first schedule request additionally builds the one sender-major
+    unique-pair factorization that every capacity shares (DESIGN.md
+    §13), after which each schedule quantity is O(U) segment algebra —
+    ``np.bincount`` / boundary flags over whole arrays, never a Python
+    loop over edges.
     """
+
+    #: Per-trace schedule LRU bound (distinct capacities kept in memory).
+    schedule_cache_entries: int = 64
 
     def __init__(self, senders, receivers, n_nodes: int) -> None:
         snd = np.asarray(senders)
@@ -193,7 +269,9 @@ class GraphTrace:
         counts = np.bincount(rcv, minlength=n_nodes)
         self.row_ptr = np.zeros(n_nodes + 1, dtype=np.int64)
         np.cumsum(counts, out=self.row_ptr[1:])
-        self._schedules: dict[int, TraceSchedule] = {}
+        self._fact: Optional[tuple] = None
+        self._schedules: "OrderedDict[int, TraceSchedule]" = OrderedDict()
+        self._disk_identity: Optional[tuple[str, str, str]] = None
 
     # -- construction ------------------------------------------------------
     @classmethod
@@ -202,10 +280,47 @@ class GraphTrace:
         attributes (e.g. :class:`repro.data.synthetic.GraphArrays`)."""
         return cls(graph.senders, graph.receivers, graph.n_nodes)
 
+    @classmethod
+    def _from_cached(cls, d: Mapping[str, Any]) -> "GraphTrace":
+        """Rebuild from a :mod:`repro.core.schedule_cache` graph payload
+        (trusted: skips validation and, when present, both sorts)."""
+        if "csr_senders" not in d or "row_ptr" not in d:
+            return cls(d["senders"], d["receivers"], d["n_nodes"])
+        obj = cls.__new__(cls)
+        obj.n_nodes = int(d["n_nodes"])
+        obj.senders = d["senders"]
+        obj.receivers = d["receivers"]
+        obj.csr_senders = d["csr_senders"]
+        obj.row_ptr = d["row_ptr"]
+        obj._fact = None
+        if all(k in d for k in ("fact_u_snd", "fact_u_rcv",
+                                "fact_mult_prefix")):
+            obj._fact = GraphTrace._finish_factorization(
+                d["fact_u_snd"], d["fact_u_rcv"],
+                d["fact_mult_prefix"][:-1], int(d["fact_mult_prefix"][-1]))
+        obj._schedules = OrderedDict()
+        obj._disk_identity = None
+        return obj
+
     # -- basic measures ----------------------------------------------------
     @property
     def n_edges(self) -> int:
         return int(self.senders.shape[0])
+
+    @property
+    def nbytes(self) -> int:
+        """In-memory footprint estimate (edge arrays, factorizations, and
+        cached schedules) — the quantity the trace-cache budget bounds."""
+        n = (self.senders.nbytes + self.receivers.nbytes
+             + self.csr_senders.nbytes + self.row_ptr.nbytes)
+        if self._fact is not None:
+            n += sum(a.nbytes for a in self._fact)
+        for s in self._schedules.values():
+            n += (s.vertex_counts.nbytes + s.edge_counts.nbytes
+                  + s.halo_counts.nbytes + s.remote_edge_counts.nbytes)
+            if s._ranked_cache is not None:
+                n += sum(a.nbytes for a in s._ranked_cache)
+        return int(n)
 
     def in_degrees(self) -> np.ndarray:
         return np.diff(self.row_ptr)
@@ -213,81 +328,359 @@ class GraphTrace:
     def out_degrees(self) -> np.ndarray:
         return np.bincount(self.senders, minlength=self.n_nodes)
 
-    # -- the partitioner ---------------------------------------------------
-    def schedule(self, tile_vertices) -> TraceSchedule:
-        """Exact balanced-partition schedule for one tile capacity (cached).
+    # -- the shared factorization (DESIGN.md §13) --------------------------
+    def _pair_factorization(self) -> tuple[np.ndarray, np.ndarray,
+                                           np.ndarray, np.ndarray]:
+        """The one sorted-edge factorization every capacity shares.
 
-        Vectorized end to end: tile membership is integer division by the
-        stride, per-tile edge counts are CSR row-pointer differences at
-        the tile boundaries, and halo / cache statistics are one
-        ``np.unique`` + ``np.lexsort`` over ``(tile, source)`` keys.
+        Returns ``(u_snd, u_rcv, u_new_src, mult_prefix)``: the unique
+        ``(sender, receiver)`` pairs in sender-major order (compact
+        dtype), a precomputed new-sender boundary mask, and the int64
+        edge-multiplicity prefix (``mult_prefix[j]`` = edges in pairs
+        ``< j``; length ``U+1``).
+
+        Receivers ascend within each sender segment, so ``receiver // K``
+        is monotone there for *every* stride K: the deduplicated
+        ``(dst_tile, source)`` pairs of any capacity are contiguous runs
+        of this list, and one capacity's halo / cut / multiplicity
+        counts are a single O(U) boundary-flag pass (U = unique pairs,
+        typically a small fraction of E on power-law graphs).  The sort
+        itself is one in-place ``np.sort`` over composite
+        ``sender * V + receiver`` keys — no stable two-pass lexsort, no
+        argsort indirection — performed once and reused by every
+        capacity, engine, and cache-hit query.
         """
+        if self._fact is None:
+            V = self.n_nodes
+            E = self.n_edges
+            if E == 0:
+                z = np.zeros(0, dtype=np.int64)
+                self._fact = (z, z, np.zeros(0, dtype=bool),
+                              np.zeros(1, dtype=np.int64))
+            elif V <= int((2**63 - 1) ** 0.5):
+                key = self.senders * np.int64(V)
+                key += self.receivers  # in place: one less E-sized pass
+                key.sort()  # fresh array: safe to sort in place
+                change = np.empty(E, dtype=bool)
+                change[0] = True
+                np.not_equal(key[1:], key[:-1], out=change[1:])
+                idx = np.flatnonzero(change)
+                u_key = key[idx]
+                dt = (np.int32 if V <= np.iinfo(np.int32).max else np.int64)
+                u_snd = (u_key // V).astype(dt, copy=False)
+                u_rcv = (u_key % V).astype(dt, copy=False)
+                self._fact = self._finish_factorization(u_snd, u_rcv, idx, E)
+            else:
+                # Composite keys would overflow int64: stable lexsort path.
+                order = np.lexsort((self.receivers, self.senders))
+                snd_s = self.senders[order]
+                rcv_s = self.receivers[order]
+                change = np.empty(E, dtype=bool)
+                change[0] = True
+                np.logical_or(snd_s[1:] != snd_s[:-1],
+                              rcv_s[1:] != rcv_s[:-1], out=change[1:])
+                idx = np.flatnonzero(change)
+                self._fact = self._finish_factorization(
+                    snd_s[idx], rcv_s[idx], idx, E)
+        return self._fact
+
+    @staticmethod
+    def _finish_factorization(u_snd, u_rcv, idx, E):
+        u_new_src = np.empty(u_snd.size, dtype=bool)
+        if u_snd.size:
+            u_new_src[0] = True
+            np.not_equal(u_snd[1:], u_snd[:-1], out=u_new_src[1:])
+        # idx[j] is the edge offset of pair j's first edge, so idx itself
+        # IS the multiplicity prefix (append E to close the last run).
+        mult_prefix = np.empty(idx.size + 1, dtype=np.int64)
+        mult_prefix[:-1] = idx
+        mult_prefix[-1] = E
+        return (u_snd, u_rcv, u_new_src, mult_prefix)
+
+    def _geometry(self, cap: int) -> tuple[int, int]:
+        n_tiles = -(-self.n_nodes // cap)
+        K = -(-self.n_nodes // n_tiles)
+        return n_tiles, K
+
+    def _tile_boundaries(self, n_tiles: int, K: int) -> np.ndarray:
+        return np.minimum(np.arange(n_tiles + 1, dtype=np.int64) * K,
+                          self.n_nodes)
+
+    def _pair_runs(self, K: int) -> tuple[np.ndarray, np.ndarray,
+                                          np.ndarray, np.ndarray]:
+        """(pair_tile, pair_count, remote, src_at_run) for stride K.
+
+        One O(U) pass over the shared factorization: a ``(dst_tile,
+        source)`` pair starts wherever the sender changes or the tile of
+        the (per-sender ascending) receiver does; its edge multiplicity
+        is a difference of the precomputed multiplicity prefix.
+        """
+        u_snd, u_rcv, u_new_src, mp = self._pair_factorization()
+        U = u_snd.size
+        if not U:
+            z = np.zeros(0, dtype=np.int64)
+            return z, z, np.zeros(0, dtype=bool), z
+        Kd = u_rcv.dtype.type(K)
+        tile_u = u_rcv // Kd
+        boundary = np.empty(U, dtype=bool)
+        boundary[0] = True
+        np.logical_or(u_new_src[1:], tile_u[1:] != tile_u[:-1],
+                      out=boundary[1:])
+        pidx = np.flatnonzero(boundary)
+        nxt = np.empty(pidx.size, dtype=np.int64)
+        nxt[:-1] = pidx[1:]
+        nxt[-1] = U
+        pair_tile = tile_u[pidx].astype(np.int64, copy=False)
+        pair_count = mp[nxt] - mp[pidx]
+        src = u_snd[pidx]
+        remote = (src // Kd) != tile_u[pidx]
+        return pair_tile, pair_count, remote, src
+
+    def _pairs_for(self, K: int) -> tuple[np.ndarray, np.ndarray]:
+        """Deduplicated ``(dst_tile, source)`` pairs for stride K, in
+        source-major order (tile ascending within each source)."""
+        pair_tile, pair_count, _, _ = self._pair_runs(K)
+        return pair_tile, pair_count
+
+    @staticmethod
+    def _validate_cap(tile_vertices) -> int:
         cap = int(tile_vertices)
         if cap != float(tile_vertices) or cap < 1:
             raise ValueError(f"tile_vertices must be a whole number >= 1 "
                              f"for a trace schedule, got {tile_vertices!r}")
-        if cap in self._schedules:
-            return self._schedules[cap]
-        V = self.n_nodes
-        n_tiles = -(-V // cap)
-        K = -(-V // n_tiles)
-        boundaries = np.minimum(np.arange(n_tiles + 1, dtype=np.int64) * K, V)
+        return cap
+
+    def _compute_schedule(self, cap: int) -> TraceSchedule:
+        """One capacity via the shared factorization: O(U) after the sort."""
+        n_tiles, K = self._geometry(cap)
+        boundaries = self._tile_boundaries(n_tiles, K)
         vertex_counts = np.diff(boundaries).astype(np.float64)
-        # Per-tile destination edges: CSR row pointer at the boundaries.
+        edge_counts = np.diff(self.row_ptr[boundaries]).astype(np.float64)
+        pair_tile, pair_count, remote, _ = self._pair_runs(K)
+        if pair_tile.size:
+            # A pair is remote when its source lives outside the
+            # destination tile; summing the run multiplicities recovers
+            # the (pre-dedup) cut edges.
+            halo_counts = np.bincount(
+                pair_tile[remote], minlength=n_tiles).astype(np.float64)
+            remote_edge_counts = np.bincount(
+                pair_tile[remote], weights=pair_count[remote],
+                minlength=n_tiles).astype(np.float64)
+        else:
+            halo_counts = np.zeros(n_tiles, dtype=np.float64)
+            remote_edge_counts = np.zeros(n_tiles, dtype=np.float64)
+        return TraceSchedule(
+            n_tiles=int(n_tiles), capacity=cap, K=int(K),
+            vertex_counts=vertex_counts, edge_counts=edge_counts,
+            halo_counts=halo_counts, remote_edge_counts=remote_edge_counts,
+            _pair_source=functools.partial(self._pairs_for, K))
+
+    # -- schedule cache plumbing ------------------------------------------
+    def _cached_schedule(self, cap: int) -> Optional[TraceSchedule]:
+        sched = self._schedules.get(cap)
+        if sched is not None:
+            self._schedules.move_to_end(cap)
+            return sched
+        return self._schedule_from_disk(cap)
+
+    def _remember_schedule(self, cap: int, sched: TraceSchedule,
+                           *, to_disk: bool = True) -> None:
+        self._schedules[cap] = sched
+        self._schedules.move_to_end(cap)
+        limit = max(1, int(self.schedule_cache_entries))
+        while len(self._schedules) > limit:
+            self._schedules.popitem(last=False)
+        if to_disk:
+            self._schedule_to_disk(cap, sched)
+
+    def clear_schedules(self) -> None:
+        """Drop the per-trace schedule LRU (memory reclaim)."""
+        self._schedules.clear()
+
+    def _schedule_from_disk(self, cap: int) -> Optional[TraceSchedule]:
+        if self._disk_identity is None:
+            return None
+        from . import schedule_cache
+        if self.n_edges < schedule_cache.min_cached_edges():
+            return None
+        key = schedule_cache.schedule_cache_key(*self._disk_identity, cap)
+        d = schedule_cache.load_schedule(key)
+        if d is None:
+            return None
+        sched = TraceSchedule(
+            n_tiles=d["n_tiles"], capacity=d["capacity"], K=d["K"],
+            vertex_counts=d["vertex_counts"], edge_counts=d["edge_counts"],
+            halo_counts=d["halo_counts"],
+            remote_edge_counts=d["remote_edge_counts"],
+            _pair_source=functools.partial(self._pairs_for, d["K"]))
+        self._remember_schedule(cap, sched, to_disk=False)
+        return sched
+
+    def _schedule_to_disk(self, cap: int, sched: TraceSchedule) -> None:
+        if self._disk_identity is None:
+            return
+        from . import schedule_cache
+        if self.n_edges < schedule_cache.min_cached_edges():
+            return
+        key = schedule_cache.schedule_cache_key(*self._disk_identity, cap)
+        schedule_cache.store_schedule(key, **sched.counts_dict())
+
+    # -- the partitioner ---------------------------------------------------
+    def schedule(self, tile_vertices, *, engine: str = "numpy") -> TraceSchedule:
+        """Exact balanced-partition schedule for one tile capacity (cached).
+
+        Amortized across capacities: tile membership is integer division
+        by the stride, per-tile edge counts are CSR row-pointer
+        differences at the tile boundaries, and halo / multiplicity
+        counts are one boundary-flag pass over the shared sender-major
+        unique-pair factorization (DESIGN.md §13).  ``engine="jax"`` routes the
+        segmented counts through the jitted path in
+        :mod:`repro.kernels.segment_reduce` (bit-identical integers).
+        """
+        cap = self._validate_cap(tile_vertices)
+        if engine not in _ENGINES:
+            raise ValueError(f"unknown trace engine {engine!r}; "
+                             f"expected one of {_ENGINES}")
+        sched = self._cached_schedule(cap)
+        if sched is None:
+            if engine == "jax":
+                sched = self._compute_schedules_jax([cap])[0]
+            else:
+                sched = self._compute_schedule(cap)
+            self._remember_schedule(cap, sched)
+        return sched
+
+    def schedules(self, tile_vertices: Sequence, *,
+                  engine: str = "numpy") -> tuple[TraceSchedule, ...]:
+        """Batched multi-capacity schedules sharing one factorization.
+
+        The whole sweep costs one shared (cached) sorted-edge
+        factorization plus a linear segmented pass per *distinct*
+        capacity; results come back in input order (duplicates allowed)
+        and land in the same per-trace LRU that :meth:`schedule` uses.
+        """
+        caps = [self._validate_cap(c) for c in tile_vertices]
+        if engine not in _ENGINES:
+            raise ValueError(f"unknown trace engine {engine!r}; "
+                             f"expected one of {_ENGINES}")
+        # Results are held locally so a sweep wider than the schedule LRU
+        # still returns every schedule (the LRU may evict early entries
+        # while later capacities compute).
+        found: dict[int, TraceSchedule] = {}
+        missing = []
+        for cap in dict.fromkeys(caps):
+            sched = self._cached_schedule(cap)
+            if sched is None:
+                missing.append(cap)
+            else:
+                found[cap] = sched
+        if missing:
+            if engine == "jax":
+                computed = self._compute_schedules_jax(missing)
+            else:
+                computed = [self._compute_schedule(c) for c in missing]
+            for cap, sched in zip(missing, computed):
+                self._remember_schedule(cap, sched)
+                found[cap] = sched
+        return tuple(found[c] for c in caps)
+
+    def _compute_schedules_jax(self, caps: Sequence[int]) -> list[TraceSchedule]:
+        """The jitted engine: one compile per sweep (padded tile axis)."""
+        from repro.kernels import segment_reduce
+
+        u_snd, u_rcv, u_new_src, mp = self._pair_factorization()
+        mult = np.diff(mp)
+        geos = [(cap, *self._geometry(cap)) for cap in caps]
+        n_pad = max(n_tiles for _, n_tiles, _ in geos)
+        out = []
+        for cap, n_tiles, K in geos:
+            halo, remote = segment_reduce.schedule_counts(
+                u_snd, u_rcv, u_new_src, mult, K, n_pad)
+            boundaries = self._tile_boundaries(n_tiles, K)
+            out.append(TraceSchedule(
+                n_tiles=int(n_tiles), capacity=int(cap), K=int(K),
+                vertex_counts=np.diff(boundaries).astype(np.float64),
+                edge_counts=np.diff(
+                    self.row_ptr[boundaries]).astype(np.float64),
+                halo_counts=np.asarray(halo)[:n_tiles].astype(np.float64),
+                remote_edge_counts=np.asarray(
+                    remote)[:n_tiles].astype(np.float64),
+                _pair_source=functools.partial(self._pairs_for, K)))
+        return out
+
+    def schedule_reference(self, tile_vertices) -> TraceSchedule:
+        """The PR-4 per-capacity algorithm, kept verbatim as the oracle.
+
+        One ``np.unique`` over composite ``(tile, source)`` keys plus an
+        eager ranking lexsort per call — O(E log E) per capacity.  The
+        parity battery and ``benchmarks/trace_scale.py`` pin the
+        amortized engines bit-identical to (and ≥10x faster than) this.
+        Results are not cached: every call pays the full PR-4 cost.
+        """
+        cap = self._validate_cap(tile_vertices)
+        V = self.n_nodes
+        n_tiles, K = self._geometry(cap)
+        boundaries = self._tile_boundaries(n_tiles, K)
+        vertex_counts = np.diff(boundaries).astype(np.float64)
         edge_counts = np.diff(self.row_ptr[boundaries]).astype(np.float64)
         dst_tile = self.receivers // K
         src_tile = self.senders // K
         remote = src_tile != dst_tile
         remote_edge_counts = np.bincount(
             dst_tile[remote], minlength=n_tiles).astype(np.float64)
-        # Reference multiplicity of every (tile, source) pair — one dedup
-        # of composite integer keys serves both the halo counts and the
-        # cache-hit ranking (the only O(E log E) pass in the schedule).
         keys = dst_tile * np.int64(V) + self.senders
         pairs, pair_count = np.unique(keys, return_counts=True)
         pair_tile = (pairs // V).astype(np.int64)
-        # Unique remote sources per destination tile: pairs whose source
-        # lives in a different tile than the destination.
         remote_pair = (pairs % V) // K != pair_tile
         halo_counts = np.bincount(
             pair_tile[remote_pair], minlength=n_tiles).astype(np.float64)
+        # Eager ranking, exactly as PR 4 paid it per capacity (the new
+        # engines defer this to the first cache-hit query).
         order = np.lexsort((-pair_count, pair_tile))
-        pair_tile = pair_tile[order]
-        pair_count = pair_count[order].astype(np.float64)
-        seg_start = np.searchsorted(pair_tile, np.arange(n_tiles))
-        pair_rank = np.arange(pair_tile.size) - seg_start[pair_tile]
-        sched = TraceSchedule(
+        ranked_tile = pair_tile[order]
+        ranked_count = pair_count[order]
+        seg_ptr = np.searchsorted(ranked_tile, np.arange(n_tiles + 1))
+        prefix = np.zeros(ranked_count.size + 1, dtype=np.int64)
+        np.cumsum(ranked_count, out=prefix[1:])
+        return TraceSchedule(
             n_tiles=int(n_tiles), capacity=cap, K=int(K),
             vertex_counts=vertex_counts, edge_counts=edge_counts,
             halo_counts=halo_counts, remote_edge_counts=remote_edge_counts,
-            _pair_tile=pair_tile, _pair_count=pair_count,
-            _pair_rank=pair_rank)
-        self._schedules[cap] = sched
-        return sched
+            _pair_source=lambda: (pair_tile, pair_count),
+            _ranked_cache=(seg_ptr.astype(np.int64), prefix))
 
 
 # ---------------------------------------------------------------------------
 # Dataset registry: names a scenario file can reference, resolving to the
 # deterministic generators in repro.data.synthetic (pure data stays pure).
 # ---------------------------------------------------------------------------
-_TRACE_DATASETS: dict[str, Callable[..., GraphTrace]] = {}
-_TRACE_CACHE: dict[tuple, GraphTrace] = {}
+_TRACE_DATASETS: dict[str, tuple[Callable[..., GraphTrace], Optional[str]]] = {}
+_TRACE_CACHE: "OrderedDict[tuple, GraphTrace]" = OrderedDict()
+#: In-process resolved-trace budget; oldest entries evict beyond it (the
+#: most recent trace always stays, even when alone it exceeds the budget).
+_TRACE_CACHE_BUDGET_BYTES = 1 << 30
 
 
 def register_trace_dataset(name: str, builder: Callable[..., GraphTrace], *,
-                           overwrite: bool = False) -> None:
+                           overwrite: bool = False,
+                           cache_token: Optional[str] = None) -> None:
     """Register a named trace dataset builder (kwargs -> GraphTrace).
 
     Builders must be deterministic in their parameters so a serialized
     trace scenario replays bit-identically; anything random must be keyed
-    by an explicit ``seed`` parameter.
+    by an explicit ``seed`` parameter.  ``cache_token`` opts the dataset
+    into the on-disk graph/schedule cache (:mod:`repro.core.
+    schedule_cache`): it is the builder's manual version stamp — bump it
+    whenever the builder's output changes for identical parameters.
+    Datasets without a token (e.g. throwaway in-memory graphs) never
+    touch the disk cache.
     """
     if not name or not isinstance(name, str):
         raise ValueError(f"dataset name must be a non-empty string, got {name!r}")
     if name in _TRACE_DATASETS and not overwrite:
         raise ValueError(f"trace dataset {name!r} already registered "
                          "(pass overwrite=True to replace)")
-    _TRACE_DATASETS[name] = builder
+    _TRACE_DATASETS[name] = (builder, cache_token)
     # Replacing a builder must invalidate any traces resolved under the
     # old one, or resolve_trace_dataset would keep serving stale graphs.
     for key in [k for k in _TRACE_CACHE if k[0] == name]:
@@ -298,31 +691,133 @@ def trace_dataset_names() -> tuple[str, ...]:
     return tuple(sorted(_TRACE_DATASETS))
 
 
+def _canonical_params(params: Mapping[str, Any]) -> str:
+    """Sorted-JSON canonical form of a params mapping.
+
+    Nested dicts/lists and numpy scalars — which a JSON scenario file or
+    a direct caller may legally hand over — serialize deterministically
+    instead of exploding ``tuple(sorted(...))`` hashing on unhashable
+    values (the PR-5 satellite bugfix; regression-tested).  Integer-valued
+    floats canonicalize to their integer (``1000000.0`` == ``1000000``,
+    matching the old tuple key's ``hash(1000) == hash(1000.0)``
+    behaviour), so the scenario front door (which normalizes params to
+    floats) and direct int-passing callers share one cache entry.
+    """
+    def canon(o):
+        if isinstance(o, np.ndarray):
+            o = o.tolist()
+        if isinstance(o, np.generic):
+            o = o.item()
+        if isinstance(o, Mapping):
+            return {str(k): canon(v) for k, v in o.items()}
+        if isinstance(o, (list, tuple)):
+            return [canon(v) for v in o]
+        if isinstance(o, float) and not isinstance(o, bool) and o.is_integer():
+            return int(o)
+        return o
+
+    def default(o):
+        return repr(o)
+
+    return json.dumps(canon(dict(params)), sort_keys=True,
+                      separators=(",", ":"), default=default)
+
+
 def _cache_key(name: str, params: Mapping[str, Any]) -> tuple:
-    return (name, tuple(sorted(params.items())))
+    return (name, _canonical_params(params))
+
+
+def _evict_to_budget() -> None:
+    """Evict oldest traces until the byte budget holds (the most recent
+    entry always survives).  Sizes are snapshotted once per call."""
+    sizes = {k: t.nbytes for k, t in _TRACE_CACHE.items()}
+    total = sum(sizes.values())
+    while len(_TRACE_CACHE) > 1 and total > _TRACE_CACHE_BUDGET_BYTES:
+        key, _ = _TRACE_CACHE.popitem(last=False)
+        total -= sizes[key]
+
+
+def _trace_cache_insert(key: tuple, trace: GraphTrace) -> None:
+    _TRACE_CACHE[key] = trace
+    _TRACE_CACHE.move_to_end(key)
+    _evict_to_budget()
+
+
+def set_trace_cache_budget(n_bytes: int) -> None:
+    """Set the in-process resolved-trace LRU budget (bytes) and evict."""
+    global _TRACE_CACHE_BUDGET_BYTES
+    n_bytes = int(n_bytes)
+    if n_bytes < 0:
+        raise ValueError(f"trace cache budget must be >= 0 bytes, "
+                         f"got {n_bytes!r}")
+    _TRACE_CACHE_BUDGET_BYTES = n_bytes
+    _evict_to_budget()
+
+
+def trace_cache_info() -> dict:
+    """Entries / bytes / budget of the in-process resolved-trace LRU."""
+    return {"entries": len(_TRACE_CACHE),
+            "bytes": int(sum(t.nbytes for t in _TRACE_CACHE.values())),
+            "budget_bytes": int(_TRACE_CACHE_BUDGET_BYTES)}
 
 
 def resolve_trace_dataset(name: str,
                           params: Optional[Mapping[str, Any]] = None,
                           ) -> GraphTrace:
-    """Build (or fetch from the in-process cache) a registered dataset."""
+    """Build (or fetch from the in-process / on-disk cache) a dataset."""
     params = dict(params or {})
     if name not in _TRACE_DATASETS:
         raise KeyError(f"unknown trace dataset {name!r}; "
                        f"registered: {list(trace_dataset_names())}")
+    builder, token = _TRACE_DATASETS[name]
     key = _cache_key(name, params)
-    if key not in _TRACE_CACHE:
+    cached = _TRACE_CACHE.get(key)
+    if cached is not None:
+        _TRACE_CACHE.move_to_end(key)
+        return cached
+    canonical = key[1]
+    trace = None
+    if token is not None:
+        from . import schedule_cache
+        gkey = schedule_cache.graph_cache_key(name, canonical, token)
+        payload = schedule_cache.load_graph(gkey)
+        if payload is not None:
+            trace = GraphTrace._from_cached(payload)
+            trace._disk_identity = (name, canonical, token)
+    if trace is None:
         try:
-            _TRACE_CACHE[key] = _TRACE_DATASETS[name](**params)
+            trace = _TRACE_DATASETS[name][0](**params)
         except TypeError as exc:
             raise ValueError(
                 f"bad parameters {sorted(params)} for trace dataset "
                 f"{name!r}: {exc}") from exc
-    return _TRACE_CACHE[key]
+        if token is not None:
+            trace._disk_identity = (name, canonical, token)
+            from . import schedule_cache
+            if trace.n_edges >= schedule_cache.min_cached_edges():
+                # Persist both factorizations so a warm process skips the
+                # generator AND the two sorts.
+                u_snd, u_rcv, _, mp = trace._pair_factorization()
+                schedule_cache.store_graph(
+                    schedule_cache.graph_cache_key(name, canonical, token),
+                    n_nodes=trace.n_nodes, senders=trace.senders,
+                    receivers=trace.receivers,
+                    csr_senders=trace.csr_senders, row_ptr=trace.row_ptr,
+                    fact_u_snd=u_snd, fact_u_rcv=u_rcv,
+                    fact_mult_prefix=mp)
+    _trace_cache_insert(key, trace)
+    return trace
 
 
 def clear_trace_cache() -> None:
-    """Drop resolved traces (tests / long-lived services reclaiming memory)."""
+    """Drop resolved traces (tests / long-lived services reclaiming memory).
+
+    Also clears each cached trace's per-capacity schedule LRU, so a
+    service holding an external reference to a trace does not keep the
+    schedule memory alive through this call.
+    """
+    for trace in _TRACE_CACHE.values():
+        trace.clear_schedules()
     _TRACE_CACHE.clear()
 
 
@@ -333,6 +828,24 @@ def _power_law_trace(*, n_nodes, n_edges, seed=0, alpha=1.6) -> GraphTrace:
         int(seed), n_nodes=int(n_nodes), n_edges=int(n_edges), d_feat=1,
         alpha=float(alpha), self_loops=False)
     return GraphTrace.from_arrays(ga)
+
+
+def _power_law_stream_trace(*, n_nodes, n_edges, seed=0,
+                            alpha=1.6) -> GraphTrace:
+    """Chunk-streamed power-law graph: the ≥10⁶-edge scaling dataset.
+
+    Identical contract to ``power_law`` (deterministic in params, no
+    self loops) but generated through
+    :func:`repro.data.synthetic.power_law_edges`, whose peak memory is
+    bounded by the fixed chunk size instead of the edge count — the
+    registry path to 10⁷-edge graphs (DESIGN.md §13).
+    """
+    from repro.data import synthetic
+
+    snd, rcv = synthetic.power_law_edges(
+        int(seed), n_nodes=int(n_nodes), n_edges=int(n_edges),
+        alpha=float(alpha))
+    return GraphTrace(snd, rcv, int(n_nodes))
 
 
 def _cora_trace(*, seed=0, alpha=1.6) -> GraphTrace:
@@ -363,7 +876,9 @@ def _ring_of_tiles_trace(*, n_nodes, n_tiles) -> GraphTrace:
     return GraphTrace.from_arrays(ga)
 
 
-register_trace_dataset("power_law", _power_law_trace)
+register_trace_dataset("power_law", _power_law_trace, cache_token="v1")
+register_trace_dataset("power_law_stream", _power_law_stream_trace,
+                       cache_token="v1")
 register_trace_dataset("cora", _cora_trace)
 register_trace_dataset("molecule", _molecule_trace)
 register_trace_dataset("ring_of_tiles", _ring_of_tiles_trace)

@@ -12,8 +12,9 @@ from typing import Optional
 
 import numpy as np
 
-__all__ = ["lm_batch", "power_law_graph", "ring_of_tiles_graph",
-           "criteo_batch", "molecule_batch", "GraphArrays"]
+__all__ = ["lm_batch", "power_law_graph", "power_law_edge_stream",
+           "power_law_edges", "ring_of_tiles_graph", "criteo_batch",
+           "molecule_batch", "GraphArrays"]
 
 
 def _rng(seed: int, step: int) -> np.random.Generator:
@@ -79,6 +80,94 @@ def power_law_graph(seed: int, *, n_nodes: int, n_edges: int, d_feat: int,
     labels = r.integers(0, n_classes, n_nodes).astype(np.int32)
     return GraphArrays(senders.astype(np.int32), receivers.astype(np.int32),
                        feat, labels)
+
+
+#: Edges per chunk of the streaming power-law generator.  Part of the
+#: stream's identity: the rng is re-seeded per chunk index, so the edge
+#: list is a pure function of (seed, params, chunk_edges) and changing
+#: the chunk size changes the graph — callers wanting the registry
+#: contract ("deterministic in params") must keep the default.
+POWER_LAW_STREAM_CHUNK = 1 << 20
+
+
+def power_law_edge_stream(seed: int, *, n_nodes: int, n_edges: int,
+                          alpha: float = 1.6,
+                          chunk_edges: int = POWER_LAW_STREAM_CHUNK):
+    """Chunk-streamed power-law edge generator for ≥10⁶-edge graphs.
+
+    Yields ``(senders, receivers)`` int64 chunks of at most
+    ``chunk_edges`` edges with the same contract as
+    :func:`power_law_graph` (destination degrees follow a power law over
+    a permuted rank order; no self loops) but O(chunk + n_nodes) peak
+    memory: endpoints are drawn by inverse-CDF ``searchsorted`` against
+    the rank-weight cumulative, and each chunk derives its own
+    ``(seed, chunk_index)`` rng so the stream is deterministic however
+    it is consumed.  Feature/label matrices are deliberately absent —
+    the trace backend only needs topology (DESIGN.md §13).
+    """
+    n_nodes = int(n_nodes)
+    n_edges = int(n_edges)
+    chunk_edges = int(chunk_edges)
+    if n_edges < 0 or chunk_edges < 1:
+        raise ValueError(f"need n_edges >= 0 and chunk_edges >= 1, got "
+                         f"n_edges={n_edges}, chunk_edges={chunk_edges}")
+    if n_nodes < 2 and n_edges > 0:
+        raise ValueError(
+            f"power_law_edge_stream needs n_nodes >= 2 to draw "
+            f"self-loop-free edges (got n_nodes={n_nodes}, "
+            f"n_edges={n_edges})")
+    w = (np.arange(1, n_nodes + 1, dtype=np.float64)) ** (-float(alpha))
+    cdf = np.cumsum(w)
+    cdf /= cdf[-1]
+    perm = _rng(seed, 0).permutation(n_nodes)
+    emitted = 0
+    chunk_index = 0
+    while emitted < n_edges:
+        m = min(chunk_edges, n_edges - emitted)
+        r = _rng(seed, chunk_index + 1)
+        snd_rank = np.searchsorted(cdf, r.random(m), side="right")
+        rcv_rank = np.searchsorted(cdf, r.random(m), side="right")
+        # float roundoff can push a draw past cdf[-1]; clamp to the last rank
+        np.minimum(snd_rank, n_nodes - 1, out=snd_rank)
+        np.minimum(rcv_rank, n_nodes - 1, out=rcv_rank)
+        snd = perm[snd_rank].astype(np.int64, copy=False)
+        rcv = perm[rcv_rank].astype(np.int64, copy=False)
+        clash = snd == rcv
+        if np.any(clash):
+            # same de-clash as power_law_graph: sender + uniform offset in
+            # [1, n_nodes) can never land back on the sender
+            offsets = r.integers(1, n_nodes, size=int(clash.sum()))
+            rcv[clash] = (snd[clash] + offsets) % n_nodes
+        yield snd, rcv
+        emitted += m
+        chunk_index += 1
+
+
+def power_law_edges(seed: int, *, n_nodes: int, n_edges: int,
+                    alpha: float = 1.6,
+                    chunk_edges: int = POWER_LAW_STREAM_CHUNK,
+                    ) -> tuple[np.ndarray, np.ndarray]:
+    """Materialize :func:`power_law_edge_stream` into compact arrays.
+
+    Senders/receivers come back in the narrowest integer dtype that
+    holds the vertex ids (int32 below 2^31 vertices), filled chunk by
+    chunk into preallocated arrays — the 10⁷-edge path of
+    ``benchmarks/trace_scale.py`` without a 10⁷-scale intermediate per
+    draw.
+    """
+    n_edges = int(n_edges)
+    dtype = (np.int32 if int(n_nodes) <= np.iinfo(np.int32).max
+             else np.int64)
+    senders = np.empty(n_edges, dtype=dtype)
+    receivers = np.empty(n_edges, dtype=dtype)
+    at = 0
+    for snd, rcv in power_law_edge_stream(seed, n_nodes=n_nodes,
+                                          n_edges=n_edges, alpha=alpha,
+                                          chunk_edges=chunk_edges):
+        senders[at:at + snd.size] = snd
+        receivers[at:at + rcv.size] = rcv
+        at += snd.size
+    return senders, receivers
 
 
 def ring_of_tiles_graph(*, n_nodes: int, n_tiles: int,

@@ -182,10 +182,19 @@ def test_trace_structural_differences_split_plan_groups():
     other_set = Scenario.trace("engn", dataset="ring_of_tiles",
                                params={"n_nodes": 1000.0, "n_tiles": 4.0},
                                N=30.0, T=5.0, tile_vertices=256.0)
+    # The tile capacity is batchable since DESIGN.md §13: other_cap joins
+    # base's plan group (the capacity axis); dataset/params stay structural.
+    assert other_cap.plan_key() == base.plan_key()
     assert len({base.plan_key(), other_cap.plan_key(), other_seed.plan_key(),
-                other_set.plan_key()}) == 4
+                other_set.plan_key()}) == 3
     res = evaluate_scenarios([base, other_cap, other_seed, other_set])
-    assert res.n_evaluations == 4
+    assert res.n_evaluations == 3
+    # ... and the shared group is still bit-identical to lone evaluations.
+    for s, r in zip([base, other_cap], res.results[:2]):
+        lone = evaluate_scenario(s)
+        assert r.total_bits == lone.total_bits
+        assert r.breakdown == lone.breakdown
+        assert r.n_tiles == lone.n_tiles
     # a full-graph scenario never shares a trace group
     full = Scenario.full_graph("engn", V=1000.0, E=6000.0, N=30.0, T=5.0,
                                tile_vertices=256.0)
@@ -324,9 +333,21 @@ def test_graph_trace_input_validation():
 def test_tiled_graph_model_trace_guards():
     trace = resolve_trace_dataset("ring_of_tiles",
                                   {"n_nodes": 100, "n_tiles": 4})
-    with pytest.raises(ValueError, match="scalar tile_vertices"):
-        TiledGraphModel("engn", tile_vertices=np.array([64.0, 128.0]),
+    # 1-D capacity arrays are the capacity axis (DESIGN.md §13); only
+    # higher ranks are rejected.
+    with pytest.raises(ValueError, match="1-D"):
+        TiledGraphModel("engn", tile_vertices=np.array([[64.0, 128.0]]),
                         trace=trace)
+    multi = TiledGraphModel("engn", tile_vertices=np.array([25.0, 50.0]),
+                            trace=trace)
+    out = multi.evaluate(FullGraphParams(V=np.array([100.0, 100.0]),
+                                         E=np.array([400.0, 400.0]),
+                                         N=np.array([30.0, 30.0]),
+                                         T=np.array([5.0, 5.0])))
+    for cap, row in zip((25.0, 50.0), range(2)):
+        lone = TiledGraphModel("engn", tile_vertices=cap, trace=trace).evaluate(
+            FullGraphParams(V=100.0, E=400.0, N=30.0, T=5.0))
+        assert float(out.total_bits()[row]) == float(lone.total_bits())
     with pytest.raises(ValueError, match="halo_dedup"):
         TiledGraphModel("engn", tile_vertices=25, halo_dedup=2.0, trace=trace)
     with pytest.raises(TypeError, match="GraphTrace"):

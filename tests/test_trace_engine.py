@@ -1,0 +1,501 @@
+"""Amortized trace-engine battery (DESIGN.md §13) + PR-5 satellite pins.
+
+Load-bearing guarantees:
+
+* **Parity battery** — the amortized shared-factorization engine, the
+  jitted JAX engine, and the Pallas segment-reduce path produce schedule
+  quantities (vertex/edge/halo/cut counts, cache-hit data) **bit
+  identical** to the per-capacity PR-4 ``np.unique`` reference
+  (``GraphTrace.schedule_reference``) across every registered trace
+  dataset x a power-of-two capacity sweep, including the >= 100k-edge
+  acceptance operating point;
+* **Capacity axis** — a batch of same-dataset trace scenarios differing
+  only in ``tile_vertices`` evaluates in exactly ONE planner group, each
+  row bit-identical to its lone evaluation;
+* **Satellites** — canonical-JSON dataset cache keys (nested params no
+  longer raise), byte-budget LRU on the resolved-trace cache, bounded
+  per-trace schedule LRU, ``clear_trace_cache`` dropping per-trace
+  schedules, vectorized ``cache_hit_fraction``, the streaming power-law
+  generator's determinism/contract, the on-disk schedule cache round
+  trip, and the ``trace_scale`` benchmark's drift gate.
+"""
+
+import json
+import os
+
+import numpy as np
+import pytest
+
+from repro.api import Scenario, evaluate_scenario, evaluate_scenarios
+from repro.core import schedule_cache
+from repro.core import trace as trace_mod
+from repro.core.trace import (GraphTrace, clear_trace_cache,
+                              register_trace_dataset, resolve_trace_dataset,
+                              set_trace_cache_budget, trace_cache_info)
+from repro.data import synthetic
+
+#: Small deterministic parameters for every registered dataset.
+DATASET_PARAMS = {
+    "power_law": {"n_nodes": 1200, "n_edges": 9000, "seed": 1, "alpha": 1.5},
+    "power_law_stream": {"n_nodes": 1200, "n_edges": 9000, "seed": 1,
+                         "alpha": 1.5},
+    "cora": {},
+    "molecule": {"batch": 16, "n_nodes": 12, "n_edges": 30},
+    "ring_of_tiles": {"n_nodes": 512, "n_tiles": 8},
+}
+
+COUNT_FIELDS = ("vertex_counts", "edge_counts", "halo_counts",
+                "remote_edge_counts")
+
+
+def _pow2_caps(V):
+    caps = sorted({max(1, V >> i) for i in range(1, 11, 2)} | {V})
+    return caps
+
+
+@pytest.fixture(autouse=True)
+def _no_disk_cache(monkeypatch):
+    """Unit tests never touch the user's on-disk cache by default."""
+    monkeypatch.setenv("REPRO_TRACE_CACHE", "0")
+    yield
+
+
+# ---------------------------------------------------------------------------
+# Parity battery: amortized / jax / pallas engines == PR-4 reference.
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("name", sorted(DATASET_PARAMS))
+def test_amortized_engine_bitmatches_reference(name):
+    trace = resolve_trace_dataset(name, DATASET_PARAMS[name])
+    for cap in _pow2_caps(trace.n_nodes):
+        new = trace.schedule(cap)
+        ref = trace.schedule_reference(cap)
+        for f in COUNT_FIELDS:
+            np.testing.assert_array_equal(
+                getattr(new, f), getattr(ref, f),
+                err_msg=f"{name} cap={cap} field={f}")
+        for hdf in (0.0, 0.1, 1.0):
+            np.testing.assert_array_equal(new.cache_hit_fraction(hdf),
+                                          ref.cache_hit_fraction(hdf))
+        assert new.halo_total == ref.halo_total
+        assert new.cut_edges == ref.cut_edges
+
+
+@pytest.mark.parametrize("name", sorted(DATASET_PARAMS))
+def test_jax_engine_bitmatches_reference(name):
+    trace = resolve_trace_dataset(name, DATASET_PARAMS[name])
+    trace.clear_schedules()
+    caps = _pow2_caps(trace.n_nodes)[:3]
+    scheds = trace.schedules(caps, engine="jax")
+    for cap, sched in zip(caps, scheds):
+        ref = trace.schedule_reference(cap)
+        for f in COUNT_FIELDS:
+            np.testing.assert_array_equal(
+                getattr(sched, f), getattr(ref, f),
+                err_msg=f"{name} cap={cap} field={f}")
+        # disk-less schedules still answer cache-hit queries (lazy pairs)
+        np.testing.assert_array_equal(sched.cache_hit_fraction(0.2),
+                                      ref.cache_hit_fraction(0.2))
+
+
+def test_pallas_segment_reduce_bitmatches_reference():
+    from repro.kernels import segment_reduce as sr
+
+    trace = resolve_trace_dataset("power_law", DATASET_PARAMS["power_law"])
+    u_snd, u_rcv, u_new_src, mp = trace._pair_factorization()
+    mult = np.diff(mp)
+    for cap in (64, 300, 1200):
+        ref = trace.schedule_reference(cap)
+        halo, cut = sr.schedule_counts_pallas(
+            u_snd, u_rcv, u_new_src, mult, ref.K, ref.n_tiles)
+        np.testing.assert_array_equal(
+            np.asarray(halo, np.float64), ref.halo_counts)
+        np.testing.assert_array_equal(
+            np.asarray(cut, np.float64), ref.remote_edge_counts)
+
+
+def test_pallas_tile_histogram_matches_bincount():
+    from repro.kernels import segment_reduce as sr
+
+    rng = np.random.default_rng(0)
+    ids = rng.integers(0, 37, size=5000).astype(np.int32)
+    w = rng.integers(0, 5, size=5000).astype(np.float32)
+    out = np.asarray(sr.tile_histogram(ids, w, 37), np.float64)
+    np.testing.assert_array_equal(out, np.bincount(ids, weights=w,
+                                                   minlength=37))
+    with pytest.raises(ValueError, match="equal-length"):
+        sr.tile_histogram(ids, w[:-1], 37)
+    # float32 exactness is guarded on the accumulated weight, not the
+    # edge count: few edges with huge multiplicities must be rejected
+    with pytest.raises(ValueError, match="float32"):
+        sr.tile_histogram(np.zeros(2, np.int32),
+                          np.full(2, 2.0**24, np.float32), 4)
+
+
+def test_big_power_law_reference_parity_and_bruteforce():
+    """The >= 100k-edge acceptance point, rerun through the new engine."""
+    params = {"n_nodes": 20000.0, "n_edges": 120000.0, "seed": 0.0,
+              "alpha": 1.3}
+    trace = resolve_trace_dataset("power_law", params)
+    assert trace.n_edges >= 100_000
+    sched = trace.schedule(1024)
+    ref = trace.schedule_reference(1024)
+    for f in COUNT_FIELDS:
+        np.testing.assert_array_equal(getattr(sched, f), getattr(ref, f))
+    # Brute-force np.unique halo on a few tiles (full check lives in
+    # test_trace.py and runs against this same engine).
+    K = sched.K
+    dst_tile = trace.receivers // K
+    for t in (0, sched.n_tiles // 2, sched.n_tiles - 1):
+        srcs = trace.senders[dst_tile == t]
+        remote = srcs[(srcs // K) != t]
+        assert sched.halo_counts[t] == np.unique(remote).size
+
+
+def test_engine_name_validated():
+    trace = resolve_trace_dataset("ring_of_tiles",
+                                  {"n_nodes": 64, "n_tiles": 4})
+    with pytest.raises(ValueError, match="engine"):
+        trace.schedule(16, engine="bogus")
+    with pytest.raises(ValueError, match="engine"):
+        trace.schedules([16], engine="bogus")
+
+
+# ---------------------------------------------------------------------------
+# Capacity axis: one planner group per (dataflow, dataset), exact rows.
+# ---------------------------------------------------------------------------
+def test_capacity_sweep_is_one_planner_group():
+    params = {"n_nodes": 1500.0, "n_edges": 9000.0, "seed": 0.0,
+              "alpha": 1.4}
+    caps = (64.0, 128.0, 300.0, 750.0, 1500.0)
+    batch = [Scenario.trace("engn", dataset="power_law", params=params,
+                            N=30.0, T=5.0, tile_vertices=c) for c in caps]
+    res = evaluate_scenarios(batch)
+    # THE acceptance assertion: same dataset, capacities only -> 1 group.
+    assert res.n_evaluations == 1
+    assert len({s.plan_key() for s in batch}) == 1
+    for s, r in zip(batch, res.results):
+        lone = evaluate_scenario(s)
+        assert r.total_bits == lone.total_bits
+        assert r.total_iterations == lone.total_iterations
+        assert r.breakdown == lone.breakdown
+        assert r.iteration_breakdown == lone.iteration_breakdown
+        assert r.n_tiles == lone.n_tiles
+    # n_tiles must reflect each row's own capacity
+    assert [r.n_tiles for r in res.results] == \
+        [float(-(-1500 // int(c))) for c in caps]
+
+
+def test_capacity_axis_with_widths_and_hardware_overrides():
+    params = {"n_nodes": 900.0, "n_edges": 5000.0, "seed": 3.0}
+    batch = [
+        Scenario.trace("hygcn", dataset="power_law", params=params,
+                       N=32.0, T=8.0, tile_vertices=cap,
+                       widths=(32.0, 16.0, 8.0), hardware={"B": B})
+        for cap, B in ((100.0, 1000.0), (450.0, 2000.0), (900.0, 1000.0))
+    ]
+    res = evaluate_scenarios(batch)
+    assert res.n_evaluations == 1
+    for s, r in zip(batch, res.results):
+        lone = evaluate_scenario(s)
+        assert r.total_bits == lone.total_bits
+        assert r.breakdown == lone.breakdown
+
+
+# ---------------------------------------------------------------------------
+# Satellite: canonical-JSON cache keys (nested params used to raise).
+# ---------------------------------------------------------------------------
+def test_cache_key_canonicalizes_nested_params():
+    built = []
+
+    def builder(**params):
+        built.append(params)
+        return GraphTrace(np.array([0, 1]), np.array([1, 0]), 2)
+
+    register_trace_dataset("_nested_params_ds", builder, overwrite=True)
+    try:
+        nested = {"shape": {"n": 2.0, "m": [1, 2]}, "seed": 0}
+        # PR-4's tuple(sorted(...)) key raised TypeError on dict values.
+        t1 = resolve_trace_dataset("_nested_params_ds", nested)
+        t2 = resolve_trace_dataset(
+            "_nested_params_ds",
+            {"seed": 0, "shape": {"m": [1, 2], "n": 2.0}})
+        assert t1 is t2  # key order canonicalized -> one build
+        assert len(built) == 1
+        t3 = resolve_trace_dataset("_nested_params_ds",
+                                   {"shape": {"n": 3.0, "m": [1, 2]},
+                                    "seed": 0})
+        assert t3 is not t1 and len(built) == 2
+        # numpy scalars canonicalize like their Python values
+        t4 = resolve_trace_dataset("_nested_params_ds",
+                                   {"shape": {"n": np.float64(2.0),
+                                              "m": [1, 2]},
+                                    "seed": np.int64(0)})
+        assert t4 is t1 and len(built) == 2
+        # integer-valued floats merge with ints (the front door
+        # normalizes params to floats; direct callers pass ints — both
+        # must share one cache/disk entry, like the old tuple key did)
+        t5 = resolve_trace_dataset("_nested_params_ds",
+                                   {"shape": {"n": 2, "m": [1.0, 2.0]},
+                                    "seed": 0.0})
+        assert t5 is t1 and len(built) == 2
+        assert (trace_mod._canonical_params({"n": 1000000})
+                == trace_mod._canonical_params({"n": 1000000.0}))
+    finally:
+        trace_mod._TRACE_DATASETS.pop("_nested_params_ds", None)
+        clear_trace_cache()
+
+
+# ---------------------------------------------------------------------------
+# Satellite: bounded caches.
+# ---------------------------------------------------------------------------
+def test_trace_cache_byte_budget_evicts_lru():
+    clear_trace_cache()
+    old_budget = trace_cache_info()["budget_bytes"]
+    try:
+        a = resolve_trace_dataset("ring_of_tiles",
+                                  {"n_nodes": 256, "n_tiles": 4})
+        set_trace_cache_budget(max(1, a.nbytes // 2))
+        # the most recent entry always survives, even over budget
+        assert trace_cache_info()["entries"] == 1
+        b = resolve_trace_dataset("ring_of_tiles",
+                                  {"n_nodes": 512, "n_tiles": 4})
+        info = trace_cache_info()
+        assert info["entries"] == 1
+        assert resolve_trace_dataset("ring_of_tiles",
+                                     {"n_nodes": 512, "n_tiles": 4}) is b
+        # raising the budget keeps both
+        set_trace_cache_budget(10 * (a.nbytes + b.nbytes))
+        resolve_trace_dataset("ring_of_tiles", {"n_nodes": 256, "n_tiles": 4})
+        assert trace_cache_info()["entries"] == 2
+        with pytest.raises(ValueError, match=">= 0"):
+            set_trace_cache_budget(-1)
+    finally:
+        set_trace_cache_budget(old_budget)
+        clear_trace_cache()
+
+
+def test_per_trace_schedule_lru_bounded(monkeypatch):
+    monkeypatch.setattr(GraphTrace, "schedule_cache_entries", 4)
+    trace = resolve_trace_dataset("power_law",
+                                  {"n_nodes": 600, "n_edges": 3000,
+                                   "seed": 0})
+    trace.clear_schedules()
+    caps = [10, 20, 30, 40, 50, 60]
+    for c in caps:
+        trace.schedule(c)
+    assert len(trace._schedules) == 4
+    assert list(trace._schedules) == caps[-4:]
+    # an LRU hit refreshes recency
+    trace.schedule(30)
+    trace.schedule(70)
+    assert 30 in trace._schedules and 40 not in trace._schedules
+
+
+def test_schedules_sweep_wider_than_lru_returns_everything(monkeypatch):
+    """A capacity sweep larger than the schedule LRU must still return a
+    full schedule per requested capacity (regression: eviction during
+    the batch used to surface None entries)."""
+    monkeypatch.setattr(GraphTrace, "schedule_cache_entries", 4)
+    trace = resolve_trace_dataset("power_law",
+                                  {"n_nodes": 600, "n_edges": 3000,
+                                   "seed": 6})
+    trace.clear_schedules()
+    caps = list(range(10, 100, 10))  # 9 distinct > LRU limit of 4
+    scheds = trace.schedules(caps)
+    assert len(scheds) == len(caps)
+    for cap, s in zip(caps, scheds):
+        assert s is not None and s.capacity == cap
+        ref = trace.schedule_reference(cap)
+        np.testing.assert_array_equal(s.halo_counts, ref.halo_counts)
+    assert len(trace._schedules) == 4
+
+
+def test_clear_trace_cache_drops_per_trace_schedules():
+    trace = resolve_trace_dataset("power_law",
+                                  {"n_nodes": 500, "n_edges": 2500,
+                                   "seed": 4})
+    trace.schedule(100)
+    assert trace._schedules
+    clear_trace_cache()
+    assert not trace._schedules
+    assert trace_cache_info()["entries"] == 0
+
+
+# ---------------------------------------------------------------------------
+# Satellite: vectorized cache_hit_fraction.
+# ---------------------------------------------------------------------------
+def test_cache_hit_fraction_vectorizes_over_hdf():
+    trace = resolve_trace_dataset("power_law",
+                                  {"n_nodes": 2000, "n_edges": 16000,
+                                   "seed": 2, "alpha": 1.2})
+    sched = trace.schedule(512)
+    hdf = np.array([0.0, 0.05, 0.1, 0.5, 1.0])
+    vec = sched.cache_hit_fraction(hdf)
+    assert vec.shape == (5, sched.n_tiles)
+    for i, h in enumerate(hdf):
+        np.testing.assert_array_equal(vec[i],
+                                      sched.cache_hit_fraction(float(h)))
+    grid = sched.cache_hit_fraction(hdf.reshape(5, 1))
+    assert grid.shape == (5, 1, sched.n_tiles)
+    # monotone in the cache size, bounded in [0, 1]
+    assert np.all(np.diff(vec, axis=0) >= 0)
+    assert np.all((vec >= 0) & (vec <= 1))
+    for bad in (1.5, -0.1, float("nan"), np.array([0.1, 2.0])):
+        with pytest.raises(ValueError, match="high_degree_fraction"):
+            sched.cache_hit_fraction(bad)
+
+
+# ---------------------------------------------------------------------------
+# Satellite: streaming chunked power-law generator.
+# ---------------------------------------------------------------------------
+def test_power_law_edges_contract():
+    snd, rcv = synthetic.power_law_edges(7, n_nodes=5000, n_edges=30000)
+    assert snd.dtype == np.int32 and rcv.dtype == np.int32
+    assert snd.size == rcv.size == 30000
+    assert not np.any(snd == rcv)
+    assert snd.min() >= 0 and rcv.max() < 5000
+    # deterministic in (seed, params)
+    snd2, rcv2 = synthetic.power_law_edges(7, n_nodes=5000, n_edges=30000)
+    np.testing.assert_array_equal(snd, snd2)
+    np.testing.assert_array_equal(rcv, rcv2)
+    # the stream yields the same edges chunk by chunk
+    parts = list(synthetic.power_law_edge_stream(7, n_nodes=5000,
+                                                 n_edges=30000))
+    np.testing.assert_array_equal(np.concatenate([p[0] for p in parts]), snd)
+    np.testing.assert_array_equal(np.concatenate([p[1] for p in parts]), rcv)
+    # chunked consumption is part of the stream identity: edge counts
+    # that straddle chunk boundaries still come out exact
+    chunks = list(synthetic.power_law_edge_stream(0, n_nodes=100,
+                                                  n_edges=2500,
+                                                  chunk_edges=1000))
+    assert [c[0].size for c in chunks] == [1000, 1000, 500]
+    with pytest.raises(ValueError, match="n_nodes >= 2"):
+        list(synthetic.power_law_edge_stream(0, n_nodes=1, n_edges=5))
+    with pytest.raises(ValueError, match="chunk_edges"):
+        list(synthetic.power_law_edge_stream(0, n_nodes=10, n_edges=5,
+                                             chunk_edges=0))
+    # power-law shape: destination degrees are heavy-tailed
+    degs = np.bincount(rcv, minlength=5000)
+    assert degs.max() > 20 * max(1.0, degs.mean())
+
+
+def test_power_law_stream_dataset_registered():
+    trace = resolve_trace_dataset("power_law_stream",
+                                  {"n_nodes": 800, "n_edges": 4000,
+                                   "seed": 5, "alpha": 1.3})
+    assert (trace.n_nodes, trace.n_edges) == (800, 4000)
+    s = evaluate_scenario(Scenario.trace(
+        "engn", dataset="power_law_stream",
+        params={"n_nodes": 800.0, "n_edges": 4000.0, "seed": 5.0,
+                "alpha": 1.3},
+        N=30.0, T=5.0, tile_vertices=200.0))
+    assert np.isfinite(s.total_bits) and s.total_bits > 0
+
+
+# ---------------------------------------------------------------------------
+# Satellite: content-addressed on-disk cache.
+# ---------------------------------------------------------------------------
+def test_disk_cache_round_trip(tmp_path, monkeypatch):
+    monkeypatch.setenv("REPRO_TRACE_CACHE", str(tmp_path))
+    monkeypatch.setenv("REPRO_TRACE_CACHE_MIN_EDGES", "0")
+    params = {"n_nodes": 700, "n_edges": 4200, "seed": 9, "alpha": 1.4}
+    clear_trace_cache()
+    t1 = resolve_trace_dataset("power_law", params)
+    s1 = t1.schedule(128)
+    files = list(tmp_path.rglob("*.npz"))
+    assert len(files) == 2  # one graph payload + one schedule payload
+    clear_trace_cache()
+    t2 = resolve_trace_dataset("power_law", params)
+    assert t2 is not t1
+    np.testing.assert_array_equal(t2.senders, t1.senders)
+    np.testing.assert_array_equal(t2.receivers, t1.receivers)
+    np.testing.assert_array_equal(t2.row_ptr, t1.row_ptr)
+    # schedule comes from disk (counts) and still answers cache-hit
+    # queries through the lazily rebuilt pair provider
+    s2 = t2.schedule(128)
+    for f in COUNT_FIELDS:
+        np.testing.assert_array_equal(getattr(s2, f), getattr(s1, f))
+    np.testing.assert_array_equal(s2.cache_hit_fraction(0.1),
+                                  s1.cache_hit_fraction(0.1))
+    ref = t2.schedule_reference(128)
+    for f in COUNT_FIELDS:
+        np.testing.assert_array_equal(getattr(s2, f), getattr(ref, f))
+    clear_trace_cache()
+
+
+def test_disk_cache_disabled_and_tokenless(tmp_path, monkeypatch):
+    params = {"n_nodes": 400, "n_edges": 2000, "seed": 1}
+    monkeypatch.setenv("REPRO_TRACE_CACHE", "0")
+    monkeypatch.setenv("REPRO_TRACE_CACHE_MIN_EDGES", "0")
+    clear_trace_cache()
+    resolve_trace_dataset("power_law", params).schedule(64)
+    assert schedule_cache.cache_root() is None
+    # tokenless datasets (ring_of_tiles, ad-hoc registrations) never
+    # write disk entries even when the cache is on
+    monkeypatch.setenv("REPRO_TRACE_CACHE", str(tmp_path))
+    clear_trace_cache()
+    resolve_trace_dataset("ring_of_tiles",
+                          {"n_nodes": 400, "n_tiles": 4}).schedule(64)
+    assert list(tmp_path.rglob("*.npz")) == []
+    clear_trace_cache()
+
+
+def test_disk_cache_min_edges_threshold(tmp_path, monkeypatch):
+    monkeypatch.setenv("REPRO_TRACE_CACHE", str(tmp_path))
+    monkeypatch.setenv("REPRO_TRACE_CACHE_MIN_EDGES", "5000")
+    clear_trace_cache()
+    resolve_trace_dataset("power_law",
+                          {"n_nodes": 300, "n_edges": 1000,
+                           "seed": 0}).schedule(64)
+    assert list(tmp_path.rglob("*.npz")) == []  # below the threshold
+    clear_trace_cache()
+
+
+def test_disk_cache_corrupt_entry_is_a_miss(tmp_path, monkeypatch):
+    monkeypatch.setenv("REPRO_TRACE_CACHE", str(tmp_path))
+    monkeypatch.setenv("REPRO_TRACE_CACHE_MIN_EDGES", "0")
+    params = {"n_nodes": 500, "n_edges": 2500, "seed": 2}
+    clear_trace_cache()
+    t1 = resolve_trace_dataset("power_law", params)
+    for f in tmp_path.rglob("*.npz"):
+        f.write_bytes(b"not an npz")
+    clear_trace_cache()
+    t2 = resolve_trace_dataset("power_law", params)  # rebuilds, no raise
+    np.testing.assert_array_equal(t2.senders, t1.senders)
+    clear_trace_cache()
+
+
+# ---------------------------------------------------------------------------
+# CI gate: the trace_scale benchmark's drift check.
+# ---------------------------------------------------------------------------
+def test_trace_scale_benchmark_smoke(tmp_path):
+    from benchmarks import trace_scale
+
+    out = tmp_path / "bench.json"
+    rc = trace_scale.main(["--edges", "20000,50000", "--points", "6",
+                           "--json", str(out)])
+    assert rc == 0
+    payload = json.loads(out.read_text())
+    assert payload["benchmark"] == "trace_scale"
+    assert payload["drift_failures"] == []
+    for row in payload["rows"]:
+        assert row["drift_errors"] == []
+        assert row["edges_per_sec"] > 0
+        assert row["speedup_vs_reference"] is not None
+        assert row["n_capacities"] == len(row["capacities"]) == 6
+
+
+@pytest.mark.slow
+def test_trace_scale_ten_million_edges_end_to_end(tmp_path):
+    """The 10^7-edge sweep (amortized engine only) schedules on CPU."""
+    from benchmarks import trace_scale
+
+    out = tmp_path / "bench.json"
+    rc = trace_scale.main(["--edges", "10000000", "--ref-max-edges", "0",
+                           "--json", str(out)])
+    assert rc == 0
+    payload = json.loads(out.read_text())
+    row = payload["rows"][0]
+    assert row["n_edges"] == 10_000_000
+    assert row["drift_errors"] == []
+    assert row["edges_per_sec"] > 1e6
