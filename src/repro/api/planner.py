@@ -335,6 +335,18 @@ def evaluate_scenarios(scenarios: Sequence[Scenario], *,
         per_term_iters = {t.name: col(t.iterations) for t in out.terms}
         n_tiles = out.meta.get("n_tiles")
         n_tiles_col = None if n_tiles is None else col(n_tiles)
+        # Trace provenance for the whole group (one in-process-LRU hit,
+        # not a rebuild): sharded / factorization-only datasets resolve
+        # transparently, so the result records what actually backed the
+        # numbers — e.g. an edge-list-free 10⁸-edge sharded build.
+        meta: dict = {}
+        if members[0].graph_kind == "trace":
+            tr = resolve_trace_dataset(members[0].graph["dataset"],
+                                       members[0].graph["params"])
+            meta["trace"] = {"dataset": members[0].graph["dataset"],
+                             "n_nodes": int(tr.n_nodes),
+                             "n_edges": int(tr.n_edges),
+                             "edge_list_free": not tr.has_edge_list}
         for j, i in enumerate(indices):
             s = members[j]
             conf = None
@@ -355,6 +367,7 @@ def evaluate_scenarios(scenarios: Sequence[Scenario], *,
                                      for k, v in per_term_iters.items()},
                 n_tiles=None if n_tiles_col is None else float(n_tiles_col[j]),
                 conformance=conf,
+                meta=meta,
             )
     return BatchResult(results=tuple(slots), groups=group_results)
 

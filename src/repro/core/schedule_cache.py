@@ -6,22 +6,30 @@ from scratch — at 10⁷ edges that is tens of seconds of pure recompute
 per process.  This module gives :mod:`repro.core.trace` a small
 content-addressed store:
 
-* **Graphs** — the edge list plus the two sort factorizations a
-  :class:`~repro.core.trace.GraphTrace` derives at construction (the
-  dst-CSR order and the global ``(sender, receiver)`` lexsort), keyed by
+* **Graphs** — the unique-pair factorization plus CSR row pointer of a
+  :class:`~repro.core.trace.GraphTrace` (and the raw edge list /
+  CSR columns when the builder materialized them), keyed by
   ``sha256({dataset, canonical params, cache token, format version})``.
+  Format v2 stores each array as its own ``.npy`` file inside an
+  atomically renamed ``<key>.graph/`` directory, so a warm resolve
+  memory-maps every array (``np.load(..., mmap_mode="r")``) instead of
+  eagerly inflating an npz: resolve cost drops to directory stats plus
+  npy header reads, and bytes are only paged in for the arrays a
+  schedule query actually touches (DESIGN.md §14).
 * **Schedules** — the per-tile count arrays of one
   :class:`~repro.core.trace.TraceSchedule` (vertex / edge / halo / cut
   counts; O(n_tiles), tiny), keyed by the graph identity plus the tile
-  capacity.  The ranked-pair cache-hit data is *not* stored — it is
-  O(unique pairs) large and recomputed lazily from the trace on demand.
+  capacity, still a single ``.npz`` (mmap would cost more than it
+  saves at this size).  The ranked-pair cache-hit data is *not* stored
+  — it is O(unique pairs) large and recomputed lazily on demand.
 
 Only dataset builders registered with an explicit ``cache_token`` take
 part (the token is the builder's manual version stamp: bumping it
 invalidates every cached artifact of that dataset), so throwaway
 in-memory datasets (``trace_scenarios_from_graph``, tests) can never be
-served stale bytes.  Entries are written atomically (`os.replace`) and
-are plain ``.npz`` files — safe to delete at any time.
+served stale bytes.  Entries are written to a temp name and
+``os.replace``-renamed — safe to delete at any time; a torn or foreign
+entry is a miss that gets dropped, never an error.
 
 Configuration (read per call, so tests can monkeypatch):
 
@@ -37,6 +45,7 @@ from __future__ import annotations
 import hashlib
 import json
 import os
+import shutil
 import tempfile
 from pathlib import Path
 from typing import Any, Mapping, Optional
@@ -54,12 +63,18 @@ __all__ = [
     "store_schedule",
 ]
 
-#: Bump when the on-disk layout of either artifact kind changes.
-FORMAT_VERSION = 1
+#: Bump when the on-disk layout of either artifact kind changes.  v2:
+#: graphs became per-array ``.npy`` directories (mmap-lazy warm
+#: resolves) with an optional edge list and a required factorization.
+FORMAT_VERSION = 2
 
 _DEFAULT_ROOT = "~/.cache/repro-trace"
 _DEFAULT_MIN_EDGES = 200_000
 _DISABLED = {"", "0", "off", "none", "disabled"}
+
+#: Graph payload arrays that may appear as ``<name>.npy`` parts.
+_GRAPH_ARRAYS = ("senders", "receivers", "csr_senders", "row_ptr",
+                 "fact_u_snd", "fact_u_rcv", "fact_mult_prefix")
 
 
 def cache_root() -> Optional[Path]:
@@ -100,7 +115,14 @@ def schedule_cache_key(dataset: str, canonical_params: str, token: str,
                     "capacity": int(capacity), "format": FORMAT_VERSION})
 
 
-def _path_for(key: str) -> Optional[Path]:
+def _graph_dir(key: str) -> Optional[Path]:
+    root = cache_root()
+    if root is None:
+        return None
+    return root / key[:2] / f"{key}.graph"
+
+
+def _schedule_path(key: str) -> Optional[Path]:
     root = cache_root()
     if root is None:
         return None
@@ -122,8 +144,7 @@ def _atomic_savez(path: Path, **arrays) -> None:
         raise
 
 
-def _load_npz(key: str) -> Optional[dict]:
-    path = _path_for(key)
+def _load_npz(path: Optional[Path]) -> Optional[dict]:
     if path is None or not path.is_file():
         return None
     try:
@@ -149,51 +170,92 @@ def _compact_int(a: np.ndarray) -> np.ndarray:
     return a
 
 
+def _drop_graph_dir(path: Path) -> None:
+    try:
+        shutil.rmtree(path)
+    except OSError:
+        pass
+
+
 # -- graphs -----------------------------------------------------------------
 def load_graph(key: str) -> Optional[dict]:
-    """Stored edge list + factorizations, or None on miss.
+    """Stored graph payload with **memory-mapped** arrays, or None on miss.
 
-    The four contract arrays come back int64 (the ``GraphTrace``
-    invariant); the unique-pair factorization keeps its compact on-disk
-    dtype (it is the bandwidth-critical operand of every per-capacity
-    pass) except the multiplicity prefix, which is int64 by contract.
+    Returns ``n_nodes`` / ``n_edges`` ints plus ``row_ptr`` (always) and
+    whichever of the edge list, CSR columns, and unique-pair
+    factorization were stored — every array an ``mmap_mode="r"`` view,
+    so nothing is read beyond npy headers until a consumer indexes it.
+    Compact on-disk dtypes are kept (:class:`~repro.core.trace.
+    GraphTrace` promotes explicitly where int64 range is needed; the
+    multiplicity prefix is re-widened by its consumer).
     """
-    d = _load_npz(key)
-    if d is None or "senders" not in d or "n_nodes" not in d:
+    path = _graph_dir(key)
+    if path is None or not path.is_dir():
         return None
-    out = {"n_nodes": int(d["n_nodes"])}
-    for name in ("senders", "receivers", "csr_senders", "row_ptr"):
-        if name in d:
-            out[name] = d[name].astype(np.int64, copy=False)
-    for name in ("fact_u_snd", "fact_u_rcv"):
-        if name in d:
-            out[name] = d[name]
-    if "fact_mult_prefix" in d:
-        out["fact_mult_prefix"] = d["fact_mult_prefix"].astype(
-            np.int64, copy=False)
-    return out
+    try:
+        meta = json.loads((path / "meta.json").read_text())
+        out = {"n_nodes": int(meta["n_nodes"]),
+               "n_edges": int(meta["n_edges"])}
+        for name in _GRAPH_ARRAYS:
+            part = path / f"{name}.npy"
+            if part.is_file():
+                out[name] = np.load(part, mmap_mode="r",
+                                    allow_pickle=False)
+        complete = "row_ptr" in out and (
+            all(f"fact_{n}" in out
+                for n in ("u_snd", "u_rcv", "mult_prefix"))
+            or ("senders" in out and "receivers" in out))
+        if not complete:
+            raise ValueError(f"incomplete graph entry: {sorted(out)}")
+        return out
+    except (OSError, ValueError, KeyError):
+        # Torn writes can't happen (the rename is atomic), so anything
+        # unreadable here is foreign or damaged: drop it -> miss.
+        _drop_graph_dir(path)
+        return None
 
 
-def store_graph(key: str, *, n_nodes: int, senders, receivers,
-                csr_senders, row_ptr, fact_u_snd=None, fact_u_rcv=None,
+def store_graph(key: str, *, n_nodes: int, n_edges: int, row_ptr,
+                senders=None, receivers=None, csr_senders=None,
+                fact_u_snd=None, fact_u_rcv=None,
                 fact_mult_prefix=None) -> bool:
-    path = _path_for(key)
+    """Persist a graph payload as an atomically renamed part directory.
+
+    ``row_ptr`` plus either the factorization trio or the raw edge list
+    is required (the invariant :func:`load_graph` enforces); everything
+    else is optional.  ``row_ptr`` stays int64 on disk — it is the one
+    array :class:`~repro.core.trace.GraphTrace` consumes at its contract
+    dtype, and keeping it verbatim lets the mmap view stand in directly.
+    """
+    path = _graph_dir(key)
     if path is None:
         return False
-    arrays = {
-        "n_nodes": np.asarray(int(n_nodes), dtype=np.int64),
-        "senders": _compact_int(senders),
-        "receivers": _compact_int(receivers),
-        "csr_senders": _compact_int(csr_senders),
-        "row_ptr": _compact_int(row_ptr),
-    }
-    if (fact_u_snd is not None and fact_u_rcv is not None
-            and fact_mult_prefix is not None):
-        arrays["fact_u_snd"] = np.asarray(fact_u_snd)
-        arrays["fact_u_rcv"] = np.asarray(fact_u_rcv)
+    arrays = {"row_ptr": np.asarray(row_ptr, dtype=np.int64)}
+    for name, a in (("senders", senders), ("receivers", receivers),
+                    ("csr_senders", csr_senders),
+                    ("fact_u_snd", fact_u_snd), ("fact_u_rcv", fact_u_rcv)):
+        if a is not None:
+            arrays[name] = _compact_int(a)
+    if fact_mult_prefix is not None:
         arrays["fact_mult_prefix"] = _compact_int(fact_mult_prefix)
     try:
-        _atomic_savez(path, **arrays)
+        path.parent.mkdir(parents=True, exist_ok=True)
+        tmp = Path(tempfile.mkdtemp(dir=path.parent, suffix=".tmp"))
+        try:
+            for name, a in arrays.items():
+                np.save(tmp / f"{name}.npy", a, allow_pickle=False)
+            (tmp / "meta.json").write_text(json.dumps(
+                {"n_nodes": int(n_nodes), "n_edges": int(n_edges),
+                 "format": FORMAT_VERSION}))
+            if path.exists():
+                # Concurrent writer won the rename race; its bytes are
+                # identical (content-addressed), keep them.
+                _drop_graph_dir(tmp)
+            else:
+                os.replace(tmp, path)
+        except BaseException:
+            _drop_graph_dir(tmp)
+            raise
     except OSError:
         return False
     return True
@@ -206,7 +268,7 @@ _SCHEDULE_FIELDS = ("vertex_counts", "edge_counts", "halo_counts",
 
 def load_schedule(key: str) -> Optional[dict]:
     """Stored per-tile count arrays (float64) plus n_tiles/capacity/K."""
-    d = _load_npz(key)
+    d = _load_npz(_schedule_path(key))
     if d is None or any(f not in d for f in _SCHEDULE_FIELDS):
         return None
     out = {f: d[f].astype(np.float64, copy=False) for f in _SCHEDULE_FIELDS}
@@ -220,7 +282,7 @@ def load_schedule(key: str) -> Optional[dict]:
 def store_schedule(key: str, *, n_tiles: int, capacity: int, K: int,
                    vertex_counts, edge_counts, halo_counts,
                    remote_edge_counts) -> bool:
-    path = _path_for(key)
+    path = _schedule_path(key)
     if path is None:
         return False
     try:

@@ -75,7 +75,7 @@ __all__ = [
 CORA_V = 2708
 CORA_E = 10556
 
-_ENGINES = ("numpy", "jax")
+_ENGINES = ("numpy", "jax", "sharded")
 
 
 def _f64(x) -> np.ndarray:
@@ -251,8 +251,6 @@ class GraphTrace:
         n_nodes = int(n_nodes)
         if n_nodes < 1:
             raise ValueError(f"n_nodes must be >= 1, got {n_nodes}")
-        snd = snd.astype(np.int64, copy=False)
-        rcv = rcv.astype(np.int64, copy=False)
         if snd.size and (snd.min() < 0 or snd.max() >= n_nodes
                          or rcv.min() < 0 or rcv.max() >= n_nodes):
             raise ValueError(
@@ -260,16 +258,22 @@ class GraphTrace:
                 f"range [{snd.min()}, {snd.max()}] and receiver range "
                 f"[{rcv.min()}, {rcv.max()}]")
         self.n_nodes = n_nodes
+        # Edge arrays keep their (validated) integer dtype — int32 input
+        # stays int32, halving the footprint at 10⁸ edges; every
+        # downstream op promotes explicitly where int64 range is needed.
         self.senders = snd
         self.receivers = rcv
-        # CSR by destination: row_ptr[v] .. row_ptr[v+1] indexes the
-        # (stable-sorted) edges aggregating INTO vertex v.
-        order = np.argsort(rcv, kind="stable")
-        self.csr_senders = snd[order]
+        self._n_edges = int(snd.size)
+        # CSR row pointer by destination: row_ptr[v] .. row_ptr[v+1]
+        # indexes the edges aggregating INTO vertex v.  O(E) bincount —
+        # the E-sized sort behind the CSR *column* array is deferred to
+        # first csr_senders access (most schedule queries never need it).
         counts = np.bincount(rcv, minlength=n_nodes)
         self.row_ptr = np.zeros(n_nodes + 1, dtype=np.int64)
         np.cumsum(counts, out=self.row_ptr[1:])
+        self._csr_senders: Optional[np.ndarray] = None
         self._fact: Optional[tuple] = None
+        self._fact_source: Optional[tuple] = None
         self._schedules: "OrderedDict[int, TraceSchedule]" = OrderedDict()
         self._disk_identity: Optional[tuple[str, str, str]] = None
 
@@ -281,23 +285,98 @@ class GraphTrace:
         return cls(graph.senders, graph.receivers, graph.n_nodes)
 
     @classmethod
+    def from_factorization(cls, n_nodes: int, u_snd, u_rcv, mult_prefix, *,
+                           row_ptr=None) -> "GraphTrace":
+        """Build an **edge-list-free** trace from a unique-pair factorization.
+
+        ``(u_snd, u_rcv)`` are the unique (sender, receiver) pairs in
+        sender-major order and ``mult_prefix`` the int64 edge-multiplicity
+        prefix (length ``U + 1``; ``mult_prefix[-1] == E``) — exactly what
+        :meth:`_pair_factorization` derives, or what the sharded pipeline
+        (:mod:`repro.distributed.trace_shard`) produces without ever
+        materializing the full edge list on one host.  The CSR row
+        pointer is recovered in O(U) from the factorization
+        (``row_counts[v] = Σ multiplicity over pairs with receiver v``)
+        unless a precomputed ``row_ptr`` is supplied.  Every schedule
+        quantity (including lazy CSR columns and cache-hit ranking)
+        works; only :meth:`schedule_reference` — the PR-4 oracle, which
+        by definition re-derives everything from raw edges — requires
+        the materialized edge list and raises without one.
+        """
+        n_nodes = int(n_nodes)
+        if n_nodes < 1:
+            raise ValueError(f"n_nodes must be >= 1, got {n_nodes}")
+        u_snd = np.asarray(u_snd)
+        u_rcv = np.asarray(u_rcv)
+        if not np.issubdtype(u_snd.dtype, np.integer):
+            u_snd = u_snd.astype(np.int64)  # e.g. an empty Python list
+        if not np.issubdtype(u_rcv.dtype, np.integer):
+            u_rcv = u_rcv.astype(np.int64)
+        mult_prefix = np.asarray(mult_prefix, dtype=np.int64)
+        if not (u_snd.ndim == u_rcv.ndim == mult_prefix.ndim == 1
+                and u_snd.size == u_rcv.size == mult_prefix.size - 1):
+            raise ValueError(
+                f"need 1-D u_snd/u_rcv of equal length U and a length-U+1 "
+                f"mult_prefix; got {u_snd.shape}, {u_rcv.shape}, "
+                f"{mult_prefix.shape}")
+        obj = cls.__new__(cls)
+        obj.n_nodes = n_nodes
+        edge_dt = u_snd.dtype if u_snd.size else np.int64
+        obj.senders = np.empty(0, dtype=edge_dt)
+        obj.receivers = np.empty(0, dtype=edge_dt)
+        obj._n_edges = int(mult_prefix[-1]) if mult_prefix.size else 0
+        if row_ptr is not None:
+            obj.row_ptr = np.asarray(row_ptr, dtype=np.int64)
+            if obj.row_ptr.shape != (n_nodes + 1,):
+                raise ValueError(f"row_ptr must have shape ({n_nodes + 1},), "
+                                 f"got {obj.row_ptr.shape}")
+        else:
+            # Exact integer counts: multiplicities are ints <= E < 2^53,
+            # so the float64 weighted bincount loses nothing.
+            counts = np.bincount(u_rcv, weights=np.diff(mult_prefix),
+                                 minlength=n_nodes).astype(np.int64)
+            obj.row_ptr = np.zeros(n_nodes + 1, dtype=np.int64)
+            np.cumsum(counts, out=obj.row_ptr[1:])
+        obj._csr_senders = None
+        obj._fact = cls._finish_factorization(
+            u_snd, u_rcv, mult_prefix[:-1], obj._n_edges)
+        obj._fact_source = None
+        obj._schedules = OrderedDict()
+        obj._disk_identity = None
+        return obj
+
+    @classmethod
     def _from_cached(cls, d: Mapping[str, Any]) -> "GraphTrace":
-        """Rebuild from a :mod:`repro.core.schedule_cache` graph payload
-        (trusted: skips validation and, when present, both sorts)."""
-        if "csr_senders" not in d or "row_ptr" not in d:
+        """Rebuild from a :mod:`repro.core.schedule_cache` graph payload.
+
+        Trusted: skips validation and every sort.  Arrays may be
+        memory-mapped (the lazy warm-resolve path): nothing here touches
+        their contents, so a warm resolve costs directory stats + header
+        reads only — the factorization's derived new-sender mask is
+        finished lazily on the first schedule query.
+        """
+        has_fact = all(k in d for k in ("fact_u_snd", "fact_u_rcv",
+                                        "fact_mult_prefix"))
+        has_edges = "senders" in d and "receivers" in d
+        if "row_ptr" not in d or not (has_fact or has_edges):
             return cls(d["senders"], d["receivers"], d["n_nodes"])
         obj = cls.__new__(cls)
         obj.n_nodes = int(d["n_nodes"])
-        obj.senders = d["senders"]
-        obj.receivers = d["receivers"]
-        obj.csr_senders = d["csr_senders"]
+        if has_edges:
+            obj.senders = d["senders"]
+            obj.receivers = d["receivers"]
+            obj._n_edges = int(obj.senders.shape[0])
+        else:
+            obj.senders = np.empty(0, dtype=np.int64)
+            obj.receivers = np.empty(0, dtype=np.int64)
+            obj._n_edges = int(d["n_edges"])
         obj.row_ptr = d["row_ptr"]
+        obj._csr_senders = d.get("csr_senders")
         obj._fact = None
-        if all(k in d for k in ("fact_u_snd", "fact_u_rcv",
-                                "fact_mult_prefix")):
-            obj._fact = GraphTrace._finish_factorization(
-                d["fact_u_snd"], d["fact_u_rcv"],
-                d["fact_mult_prefix"][:-1], int(d["fact_mult_prefix"][-1]))
+        obj._fact_source = None
+        if has_fact:
+            obj._fact_source = (d["fact_u_snd"], d["fact_u_rcv"],
+                                d["fact_mult_prefix"])
         obj._schedules = OrderedDict()
         obj._disk_identity = None
         return obj
@@ -305,14 +384,57 @@ class GraphTrace:
     # -- basic measures ----------------------------------------------------
     @property
     def n_edges(self) -> int:
-        return int(self.senders.shape[0])
+        return self._n_edges
+
+    @property
+    def has_edge_list(self) -> bool:
+        """False for factorization-only traces (sharded / streamed builds)."""
+        return self.senders.shape[0] == self._n_edges
+
+    @property
+    def csr_senders(self) -> np.ndarray:
+        """CSR column array: source vertices in destination-major order
+        (senders ascend within each destination row).
+
+        Built lazily on first access — schedule queries never need it,
+        and skipping its E-sized sort is what makes trace construction
+        O(E) bincount work (DESIGN.md §14).  Edge-list traces sort a
+        receiver-major composite key; factorization-only traces expand
+        the unique pairs re-sorted receiver-major (same result: within a
+        (receiver, sender) run the expansion is order-free).
+        """
+        if self._csr_senders is None:
+            V = self.n_nodes
+            E = self._n_edges
+            if E == 0:
+                self._csr_senders = np.empty(0, dtype=np.int64)
+            elif self.has_edge_list:
+                if V <= int((2**63 - 1) ** 0.5):
+                    key = np.multiply(self.receivers, V, dtype=np.int64)
+                    key += self.senders
+                    key.sort()
+                    key %= V  # in place: the sorted keys become the columns
+                    self._csr_senders = key
+                else:
+                    order = np.lexsort((self.senders, self.receivers))
+                    self._csr_senders = np.asarray(
+                        self.senders, dtype=np.int64)[order]
+            else:
+                u_snd, u_rcv, _, mp = self._pair_factorization()
+                order = np.lexsort((u_snd, u_rcv))
+                self._csr_senders = np.repeat(
+                    np.asarray(u_snd, dtype=np.int64)[order],
+                    np.diff(mp)[order])
+        return self._csr_senders
 
     @property
     def nbytes(self) -> int:
         """In-memory footprint estimate (edge arrays, factorizations, and
         cached schedules) — the quantity the trace-cache budget bounds."""
         n = (self.senders.nbytes + self.receivers.nbytes
-             + self.csr_senders.nbytes + self.row_ptr.nbytes)
+             + self.row_ptr.nbytes)
+        if self._csr_senders is not None:
+            n += self._csr_senders.nbytes
         if self._fact is not None:
             n += sum(a.nbytes for a in self._fact)
         for s in self._schedules.values():
@@ -326,6 +448,10 @@ class GraphTrace:
         return np.diff(self.row_ptr)
 
     def out_degrees(self) -> np.ndarray:
+        if not self.has_edge_list:
+            u_snd, _, _, mp = self._pair_factorization()
+            return np.bincount(u_snd, weights=np.diff(mp),
+                               minlength=self.n_nodes).astype(np.int64)
         return np.bincount(self.senders, minlength=self.n_nodes)
 
     # -- the shared factorization (DESIGN.md §13) --------------------------
@@ -353,12 +479,26 @@ class GraphTrace:
         if self._fact is None:
             V = self.n_nodes
             E = self.n_edges
-            if E == 0:
+            if self._fact_source is not None:
+                # Disk-cached (possibly memory-mapped) factorization: the
+                # derived new-sender mask is the only thing left to build
+                # — O(U), no sort, touched only on first schedule query.
+                u_snd, u_rcv, mp = self._fact_source
+                mp = np.asarray(mp, dtype=np.int64)
+                self._fact = self._finish_factorization(
+                    u_snd, u_rcv, mp[:-1], int(mp[-1]))
+                self._fact_source = None
+            elif E == 0:
                 z = np.zeros(0, dtype=np.int64)
                 self._fact = (z, z, np.zeros(0, dtype=bool),
                               np.zeros(1, dtype=np.int64))
+            elif not self.has_edge_list:
+                raise RuntimeError(
+                    "factorization-only trace lost its factorization")
             elif V <= int((2**63 - 1) ** 0.5):
-                key = self.senders * np.int64(V)
+                # dtype pinned: int32 edge arrays must not decide the key
+                # width (the composite range is V^2, not V)
+                key = np.multiply(self.senders, V, dtype=np.int64)
                 key += self.receivers  # in place: one less E-sized pass
                 key.sort()  # fresh array: safe to sort in place
                 change = np.empty(E, dtype=bool)
@@ -545,6 +685,8 @@ class GraphTrace:
         if sched is None:
             if engine == "jax":
                 sched = self._compute_schedules_jax([cap])[0]
+            elif engine == "sharded":
+                sched = self._compute_schedules_sharded([cap])[0]
             else:
                 sched = self._compute_schedule(cap)
             self._remember_schedule(cap, sched)
@@ -577,6 +719,8 @@ class GraphTrace:
         if missing:
             if engine == "jax":
                 computed = self._compute_schedules_jax(missing)
+            elif engine == "sharded":
+                computed = self._compute_schedules_sharded(missing)
             else:
                 computed = [self._compute_schedule(c) for c in missing]
             for cap, sched in zip(missing, computed):
@@ -608,6 +752,29 @@ class GraphTrace:
                 _pair_source=functools.partial(self._pairs_for, K)))
         return out
 
+    def _compute_schedules_sharded(self, caps: Sequence[int]
+                                   ) -> list[TraceSchedule]:
+        """The sharded engine: the O(U) boundary-flag pass split at
+        new-sender boundaries and run per shard (bit-identical partial
+        bincounts summed; :mod:`repro.distributed.trace_shard`)."""
+        from repro.distributed import trace_shard
+
+        out = []
+        for cap in caps:
+            n_tiles, K = self._geometry(cap)
+            boundaries = self._tile_boundaries(n_tiles, K)
+            halo, remote = trace_shard.sharded_schedule_counts(
+                self._pair_factorization(), K, n_tiles)
+            out.append(TraceSchedule(
+                n_tiles=int(n_tiles), capacity=int(cap), K=int(K),
+                vertex_counts=np.diff(boundaries).astype(np.float64),
+                edge_counts=np.diff(
+                    self.row_ptr[boundaries]).astype(np.float64),
+                halo_counts=halo.astype(np.float64),
+                remote_edge_counts=remote.astype(np.float64),
+                _pair_source=functools.partial(self._pairs_for, K)))
+        return out
+
     def schedule_reference(self, tile_vertices) -> TraceSchedule:
         """The PR-4 per-capacity algorithm, kept verbatim as the oracle.
 
@@ -618,6 +785,11 @@ class GraphTrace:
         Results are not cached: every call pays the full PR-4 cost.
         """
         cap = self._validate_cap(tile_vertices)
+        if not self.has_edge_list:
+            raise RuntimeError(
+                "schedule_reference needs the materialized edge list; this "
+                "trace is factorization-only (sharded/streamed build). "
+                "Rebuild it from raw senders/receivers to run the oracle.")
         V = self.n_nodes
         n_tiles, K = self._geometry(cap)
         boundaries = self._tile_boundaries(n_tiles, K)
@@ -795,16 +967,24 @@ def resolve_trace_dataset(name: str,
             trace._disk_identity = (name, canonical, token)
             from . import schedule_cache
             if trace.n_edges >= schedule_cache.min_cached_edges():
-                # Persist both factorizations so a warm process skips the
-                # generator AND the two sorts.
+                # Persist the factorization (and the edge list when the
+                # builder materialized one) so a warm process skips the
+                # generator AND every sort.  csr_senders is stored only
+                # if already built — forcing its E-sized sort here would
+                # charge every cold resolve for a rarely-read array.
                 u_snd, u_rcv, _, mp = trace._pair_factorization()
+                kw = {}
+                if trace.has_edge_list and trace.n_edges:
+                    kw["senders"] = trace.senders
+                    kw["receivers"] = trace.receivers
+                if trace._csr_senders is not None:
+                    kw["csr_senders"] = trace._csr_senders
                 schedule_cache.store_graph(
                     schedule_cache.graph_cache_key(name, canonical, token),
-                    n_nodes=trace.n_nodes, senders=trace.senders,
-                    receivers=trace.receivers,
-                    csr_senders=trace.csr_senders, row_ptr=trace.row_ptr,
+                    n_nodes=trace.n_nodes, n_edges=trace.n_edges,
+                    row_ptr=trace.row_ptr,
                     fact_u_snd=u_snd, fact_u_rcv=u_rcv,
-                    fact_mult_prefix=mp)
+                    fact_mult_prefix=mp, **kw)
     _trace_cache_insert(key, trace)
     return trace
 
@@ -848,6 +1028,27 @@ def _power_law_stream_trace(*, n_nodes, n_edges, seed=0,
     return GraphTrace(snd, rcv, int(n_nodes))
 
 
+def _power_law_sharded_trace(*, n_nodes, n_edges, seed=0,
+                             alpha=1.6) -> GraphTrace:
+    """Device-parallel sharded build of the ``power_law_stream`` graph.
+
+    Same edge multiset as ``power_law_stream`` for identical parameters
+    (the drift gate pins the factorizations bit-identical), but built by
+    :mod:`repro.distributed.trace_shard`: per-shard chunk generation,
+    local composite-key sorts, a range-bucketed exchange, and per-bucket
+    unique-pair merges — the full edge list never materializes on one
+    host, so the builder reaches 10⁸–10⁹ edges (DESIGN.md §14).  The
+    shard count is an execution detail, *not* graph identity: it comes
+    from ``REPRO_TRACE_SHARDS`` (else the host's device/CPU count) and
+    never enters the cache key.
+    """
+    from repro.distributed import trace_shard
+
+    return trace_shard.build_power_law_trace(
+        n_nodes=int(n_nodes), n_edges=int(n_edges), seed=int(seed),
+        alpha=float(alpha))
+
+
 def _cora_trace(*, seed=0, alpha=1.6) -> GraphTrace:
     """Cora-sized deterministic power-law graph (V/E from the Cora config)."""
     return _power_law_trace(n_nodes=CORA_V, n_edges=CORA_E,
@@ -878,6 +1079,8 @@ def _ring_of_tiles_trace(*, n_nodes, n_tiles) -> GraphTrace:
 
 register_trace_dataset("power_law", _power_law_trace, cache_token="v1")
 register_trace_dataset("power_law_stream", _power_law_stream_trace,
+                       cache_token="v1")
+register_trace_dataset("power_law_sharded", _power_law_sharded_trace,
                        cache_token="v1")
 register_trace_dataset("cora", _cora_trace)
 register_trace_dataset("molecule", _molecule_trace)

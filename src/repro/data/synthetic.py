@@ -13,8 +13,9 @@ from typing import Optional
 import numpy as np
 
 __all__ = ["lm_batch", "power_law_graph", "power_law_edge_stream",
-           "power_law_edges", "ring_of_tiles_graph", "criteo_batch",
-           "molecule_batch", "GraphArrays"]
+           "power_law_edges", "power_law_stream_blocks",
+           "ring_of_tiles_graph", "criteo_batch", "molecule_batch",
+           "GraphArrays"]
 
 
 def _rng(seed: int, step: int) -> np.random.Generator:
@@ -82,70 +83,130 @@ def power_law_graph(seed: int, *, n_nodes: int, n_edges: int, d_feat: int,
                        feat, labels)
 
 
-#: Edges per chunk of the streaming power-law generator.  Part of the
-#: stream's identity: the rng is re-seeded per chunk index, so the edge
-#: list is a pure function of (seed, params, chunk_edges) and changing
-#: the chunk size changes the graph — callers wanting the registry
-#: contract ("deterministic in params") must keep the default.
+#: Edges per *generation block* of the streaming power-law generator.
+#: Part of the stream's identity: the rng is re-seeded per block index,
+#: so the edge list is a pure function of (seed, params) alone — the
+#: ``chunk_edges`` a consumer asks for only controls emission
+#: granularity and never changes the graph (DESIGN.md §14).  Changing
+#: this constant *does* change every streamed graph; it is a format
+#: decision, not a tuning knob.
 POWER_LAW_STREAM_CHUNK = 1 << 20
+
+
+def _power_law_stream_setup(seed: int, n_nodes: int, alpha: float):
+    """(cdf, perm) shared by every block of one stream."""
+    w = (np.arange(1, n_nodes + 1, dtype=np.float64)) ** (-float(alpha))
+    cdf = np.cumsum(w)
+    cdf /= cdf[-1]
+    perm = _rng(seed, 0).permutation(n_nodes)
+    return cdf, perm
+
+
+def _power_law_block(seed: int, block_index: int, m: int, cdf, perm,
+                     n_nodes: int):
+    """Block ``block_index`` of the stream: ``m`` edges from its own rng."""
+    r = _rng(seed, block_index + 1)
+    snd_rank = np.searchsorted(cdf, r.random(m), side="right")
+    rcv_rank = np.searchsorted(cdf, r.random(m), side="right")
+    # float roundoff can push a draw past cdf[-1]; clamp to the last rank
+    np.minimum(snd_rank, n_nodes - 1, out=snd_rank)
+    np.minimum(rcv_rank, n_nodes - 1, out=rcv_rank)
+    snd = perm[snd_rank].astype(np.int64, copy=False)
+    rcv = perm[rcv_rank].astype(np.int64, copy=False)
+    clash = snd == rcv
+    if np.any(clash):
+        # same de-clash as power_law_graph: sender + uniform offset in
+        # [1, n_nodes) can never land back on the sender
+        offsets = r.integers(1, n_nodes, size=int(clash.sum()))
+        rcv[clash] = (snd[clash] + offsets) % n_nodes
+    return snd, rcv
+
+
+def power_law_stream_blocks(n_edges: int) -> int:
+    """Number of fixed-size generation blocks in an ``n_edges`` stream."""
+    n_edges = int(n_edges)
+    return -(-n_edges // POWER_LAW_STREAM_CHUNK) if n_edges > 0 else 0
 
 
 def power_law_edge_stream(seed: int, *, n_nodes: int, n_edges: int,
                           alpha: float = 1.6,
-                          chunk_edges: int = POWER_LAW_STREAM_CHUNK):
+                          chunk_edges: int = POWER_LAW_STREAM_CHUNK,
+                          shard: int = 0, n_shards: int = 1):
     """Chunk-streamed power-law edge generator for ≥10⁶-edge graphs.
 
     Yields ``(senders, receivers)`` int64 chunks of at most
     ``chunk_edges`` edges with the same contract as
     :func:`power_law_graph` (destination degrees follow a power law over
-    a permuted rank order; no self loops) but O(chunk + n_nodes) peak
+    a permuted rank order; no self loops) but O(block + n_nodes) peak
     memory: endpoints are drawn by inverse-CDF ``searchsorted`` against
-    the rank-weight cumulative, and each chunk derives its own
-    ``(seed, chunk_index)`` rng so the stream is deterministic however
-    it is consumed.  Feature/label matrices are deliberately absent —
-    the trace backend only needs topology (DESIGN.md §13).
+    the rank-weight cumulative.
+
+    The stream is generated in fixed internal blocks of
+    :data:`POWER_LAW_STREAM_CHUNK` edges, each from its own
+    ``(seed, block_index)`` rng, so the concatenated edge list is a pure
+    function of ``(seed, n_nodes, n_edges, alpha)`` — **invariant to
+    ``chunk_edges``** (which only sets emission granularity) and to how
+    the blocks are divided among shards.  ``shard`` / ``n_shards``
+    restrict the stream to the blocks ``block_index % n_shards ==
+    shard`` (round-robin ownership): the shard streams are disjoint,
+    together cover every block, and interleaving them back in block
+    order reproduces the single-shard stream exactly — the generation
+    half of the sharded trace pipeline
+    (:mod:`repro.distributed.trace_shard`, DESIGN.md §14).
+    Feature/label matrices are deliberately absent — the trace backend
+    only needs topology (DESIGN.md §13).
     """
     n_nodes = int(n_nodes)
     n_edges = int(n_edges)
     chunk_edges = int(chunk_edges)
+    shard = int(shard)
+    n_shards = int(n_shards)
     if n_edges < 0 or chunk_edges < 1:
         raise ValueError(f"need n_edges >= 0 and chunk_edges >= 1, got "
                          f"n_edges={n_edges}, chunk_edges={chunk_edges}")
+    if n_shards < 1 or not 0 <= shard < n_shards:
+        raise ValueError(f"need 0 <= shard < n_shards, got shard={shard}, "
+                         f"n_shards={n_shards}")
     if n_nodes < 2 and n_edges > 0:
         raise ValueError(
             f"power_law_edge_stream needs n_nodes >= 2 to draw "
             f"self-loop-free edges (got n_nodes={n_nodes}, "
             f"n_edges={n_edges})")
-    w = (np.arange(1, n_nodes + 1, dtype=np.float64)) ** (-float(alpha))
-    cdf = np.cumsum(w)
-    cdf /= cdf[-1]
-    perm = _rng(seed, 0).permutation(n_nodes)
-    emitted = 0
-    chunk_index = 0
-    while emitted < n_edges:
-        m = min(chunk_edges, n_edges - emitted)
-        r = _rng(seed, chunk_index + 1)
-        snd_rank = np.searchsorted(cdf, r.random(m), side="right")
-        rcv_rank = np.searchsorted(cdf, r.random(m), side="right")
-        # float roundoff can push a draw past cdf[-1]; clamp to the last rank
-        np.minimum(snd_rank, n_nodes - 1, out=snd_rank)
-        np.minimum(rcv_rank, n_nodes - 1, out=rcv_rank)
-        snd = perm[snd_rank].astype(np.int64, copy=False)
-        rcv = perm[rcv_rank].astype(np.int64, copy=False)
-        clash = snd == rcv
-        if np.any(clash):
-            # same de-clash as power_law_graph: sender + uniform offset in
-            # [1, n_nodes) can never land back on the sender
-            offsets = r.integers(1, n_nodes, size=int(clash.sum()))
-            rcv[clash] = (snd[clash] + offsets) % n_nodes
-        yield snd, rcv
-        emitted += m
-        chunk_index += 1
+    cdf, perm = _power_law_stream_setup(seed, n_nodes, alpha)
+    B = POWER_LAW_STREAM_CHUNK
+    n_blocks = power_law_stream_blocks(n_edges)
+    pending: list[tuple[np.ndarray, np.ndarray]] = []
+    buffered = 0
+    for b in range(shard, n_blocks, n_shards):
+        m = min(B, n_edges - b * B)
+        snd, rcv = _power_law_block(seed, b, m, cdf, perm, n_nodes)
+        pending.append((snd, rcv))
+        buffered += m
+        while buffered >= chunk_edges:
+            # emit exactly chunk_edges from the buffered block slices
+            if len(pending) == 1 and pending[0][0].size == chunk_edges:
+                (out,) = pending
+                pending = []
+            else:
+                snd_c = np.concatenate([p[0] for p in pending])
+                rcv_c = np.concatenate([p[1] for p in pending])
+                out = (snd_c[:chunk_edges], rcv_c[:chunk_edges])
+                tail = (snd_c[chunk_edges:], rcv_c[chunk_edges:])
+                pending = [tail] if tail[0].size else []
+            buffered -= chunk_edges
+            yield out
+    if buffered:
+        if len(pending) == 1:
+            yield pending[0]
+        else:
+            yield (np.concatenate([p[0] for p in pending]),
+                   np.concatenate([p[1] for p in pending]))
 
 
 def power_law_edges(seed: int, *, n_nodes: int, n_edges: int,
                     alpha: float = 1.6,
                     chunk_edges: int = POWER_LAW_STREAM_CHUNK,
+                    shard: int = 0, n_shards: int = 1,
                     ) -> tuple[np.ndarray, np.ndarray]:
     """Materialize :func:`power_law_edge_stream` into compact arrays.
 
@@ -153,17 +214,24 @@ def power_law_edges(seed: int, *, n_nodes: int, n_edges: int,
     holds the vertex ids (int32 below 2^31 vertices), filled chunk by
     chunk into preallocated arrays — the 10⁷-edge path of
     ``benchmarks/trace_scale.py`` without a 10⁷-scale intermediate per
-    draw.
+    draw.  With ``n_shards > 1`` only the blocks owned by ``shard``
+    materialize (in block order); the multiset union over all shards is
+    exactly the single-shard edge list.
     """
     n_edges = int(n_edges)
     dtype = (np.int32 if int(n_nodes) <= np.iinfo(np.int32).max
              else np.int64)
-    senders = np.empty(n_edges, dtype=dtype)
-    receivers = np.empty(n_edges, dtype=dtype)
+    B = POWER_LAW_STREAM_CHUNK
+    owned = sum(min(B, n_edges - b * B)
+                for b in range(int(shard), power_law_stream_blocks(n_edges),
+                               int(n_shards)))
+    senders = np.empty(owned, dtype=dtype)
+    receivers = np.empty(owned, dtype=dtype)
     at = 0
     for snd, rcv in power_law_edge_stream(seed, n_nodes=n_nodes,
                                           n_edges=n_edges, alpha=alpha,
-                                          chunk_edges=chunk_edges):
+                                          chunk_edges=chunk_edges,
+                                          shard=shard, n_shards=n_shards):
         senders[at:at + snd.size] = snd
         receivers[at:at + rcv.size] = rcv
         at += snd.size

@@ -1,6 +1,22 @@
 """Distribution substrate: meshes, sharding policies, collectives, pipeline
-parallelism, resilience."""
+parallelism, resilience.
 
-from .sharding import ShardingPolicy, make_policy
+``ShardingPolicy`` / ``make_policy`` are re-exported lazily: importing
+them pulls in jax, while :mod:`repro.distributed.trace_shard` (the
+sharded trace pipeline, DESIGN.md §14) is pure numpy and must stay
+importable — and fast to import — without touching jax.
+"""
 
-__all__ = ["ShardingPolicy", "make_policy"]
+__all__ = ["ShardingPolicy", "make_policy", "trace_shard"]
+
+
+def __getattr__(name: str):
+    # importlib.import_module, not `from . import x`: the latter probes
+    # this very __getattr__ via hasattr before importing -> recursion.
+    import importlib
+
+    if name in ("ShardingPolicy", "make_policy"):
+        return getattr(importlib.import_module(".sharding", __name__), name)
+    if name == "trace_shard":
+        return importlib.import_module(".trace_shard", __name__)
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")

@@ -39,6 +39,8 @@ DATASET_PARAMS = {
     "power_law": {"n_nodes": 1200, "n_edges": 9000, "seed": 1, "alpha": 1.5},
     "power_law_stream": {"n_nodes": 1200, "n_edges": 9000, "seed": 1,
                          "alpha": 1.5},
+    "power_law_sharded": {"n_nodes": 1200, "n_edges": 9000, "seed": 1,
+                          "alpha": 1.5},
     "cora": {},
     "molecule": {"batch": 16, "n_nodes": 12, "n_edges": 30},
     "ring_of_tiles": {"n_nodes": 512, "n_tiles": 8},
@@ -63,12 +65,23 @@ def _no_disk_cache(monkeypatch):
 # ---------------------------------------------------------------------------
 # Parity battery: amortized / jax / pallas engines == PR-4 reference.
 # ---------------------------------------------------------------------------
+def _reference_trace(name, trace):
+    """The trace to run the PR-4 oracle on: ``power_law_sharded`` builds
+    factorization-only traces (no edge list -> no oracle), but its graph
+    is by contract the same as ``power_law_stream`` for equal params."""
+    if trace.has_edge_list:
+        return trace
+    assert name == "power_law_sharded"
+    return resolve_trace_dataset("power_law_stream", DATASET_PARAMS[name])
+
+
 @pytest.mark.parametrize("name", sorted(DATASET_PARAMS))
 def test_amortized_engine_bitmatches_reference(name):
     trace = resolve_trace_dataset(name, DATASET_PARAMS[name])
+    oracle = _reference_trace(name, trace)
     for cap in _pow2_caps(trace.n_nodes):
         new = trace.schedule(cap)
-        ref = trace.schedule_reference(cap)
+        ref = oracle.schedule_reference(cap)
         for f in COUNT_FIELDS:
             np.testing.assert_array_equal(
                 getattr(new, f), getattr(ref, f),
@@ -83,11 +96,12 @@ def test_amortized_engine_bitmatches_reference(name):
 @pytest.mark.parametrize("name", sorted(DATASET_PARAMS))
 def test_jax_engine_bitmatches_reference(name):
     trace = resolve_trace_dataset(name, DATASET_PARAMS[name])
+    oracle = _reference_trace(name, trace)
     trace.clear_schedules()
     caps = _pow2_caps(trace.n_nodes)[:3]
     scheds = trace.schedules(caps, engine="jax")
     for cap, sched in zip(caps, scheds):
-        ref = trace.schedule_reference(cap)
+        ref = oracle.schedule_reference(cap)
         for f in COUNT_FIELDS:
             np.testing.assert_array_equal(
                 getattr(sched, f), getattr(ref, f),
@@ -402,8 +416,9 @@ def test_disk_cache_round_trip(tmp_path, monkeypatch):
     clear_trace_cache()
     t1 = resolve_trace_dataset("power_law", params)
     s1 = t1.schedule(128)
-    files = list(tmp_path.rglob("*.npz"))
-    assert len(files) == 2  # one graph payload + one schedule payload
+    # format v2: one graph part-directory + one schedule npz
+    assert len(list(tmp_path.rglob("*.graph"))) == 1
+    assert len(list(tmp_path.rglob("*.npz"))) == 1
     clear_trace_cache()
     t2 = resolve_trace_dataset("power_law", params)
     assert t2 is not t1
@@ -437,6 +452,7 @@ def test_disk_cache_disabled_and_tokenless(tmp_path, monkeypatch):
     resolve_trace_dataset("ring_of_tiles",
                           {"n_nodes": 400, "n_tiles": 4}).schedule(64)
     assert list(tmp_path.rglob("*.npz")) == []
+    assert list(tmp_path.rglob("*.graph")) == []
     clear_trace_cache()
 
 
@@ -447,7 +463,9 @@ def test_disk_cache_min_edges_threshold(tmp_path, monkeypatch):
     resolve_trace_dataset("power_law",
                           {"n_nodes": 300, "n_edges": 1000,
                            "seed": 0}).schedule(64)
-    assert list(tmp_path.rglob("*.npz")) == []  # below the threshold
+    # below the threshold: no graph dirs, no schedule npz
+    assert list(tmp_path.rglob("*.npz")) == []
+    assert list(tmp_path.rglob("*.graph")) == []
     clear_trace_cache()
 
 
@@ -459,9 +477,15 @@ def test_disk_cache_corrupt_entry_is_a_miss(tmp_path, monkeypatch):
     t1 = resolve_trace_dataset("power_law", params)
     for f in tmp_path.rglob("*.npz"):
         f.write_bytes(b"not an npz")
+    for f in tmp_path.rglob("*.graph/*"):
+        f.write_bytes(b"garbage")  # torn npy parts AND torn meta.json
     clear_trace_cache()
     t2 = resolve_trace_dataset("power_law", params)  # rebuilds, no raise
     np.testing.assert_array_equal(t2.senders, t1.senders)
+    # the damaged graph directory was dropped and re-stored clean
+    clear_trace_cache()
+    t3 = resolve_trace_dataset("power_law", params)
+    np.testing.assert_array_equal(np.asarray(t3.row_ptr), t1.row_ptr)
     clear_trace_cache()
 
 
@@ -483,6 +507,11 @@ def test_trace_scale_benchmark_smoke(tmp_path):
         assert row["edges_per_sec"] > 0
         assert row["speedup_vs_reference"] is not None
         assert row["n_capacities"] == len(row["capacities"]) == 6
+        # PR-6 sharded-pipeline stages + peak-RSS tracking per row
+        assert row["t_total_sharded_s"] > 0
+        assert row["t_total_single_s"] > 0
+        assert row["n_shards"] >= 1
+        assert row["rss_peak_kb"]["shard_generate_sort_kb"] != 0
 
 
 @pytest.mark.slow
