@@ -13,13 +13,18 @@ One declarative, serializable query API for every
   batches; the legacy ``figN_*`` sweep functions are thin clients.
 * ``python -m repro.api`` — the service-shaped CLI: evaluate scenario
   files (``--scenario batch.json``), named templates (``--template``),
-  workload bridges (``--workload``), and emit ``BENCH_scenarios.json``.
+  workload bridges (``--workload``), run the §15 design-space auto-tuner
+  (``--tune batch.json``), and emit ``BENCH_scenarios.json`` /
+  ``BENCH_tune.json``.
 
 Workload configs join through :meth:`repro.configs.base.ArchDef.
 to_scenarios`, which translates each architecture's DESIGN.md §5
 tile-language mapping into evaluable scenarios across any set of
 registered dataflows.
 """
+
+from repro.core.tune import (InfeasibleBudgetError, TunePoint, TuneResult,
+                             tune_scenario)
 
 from .planner import (BatchResult, GroupResult, ScenarioResult,
                       evaluate_groups, evaluate_scenario, evaluate_scenarios)
@@ -50,4 +55,9 @@ __all__ = [
     "template_names",
     "tile_scenarios_from_graph",
     "trace_scenarios_from_graph",
+    # §15 design-space auto-tuner (re-exported from repro.core.tune)
+    "InfeasibleBudgetError",
+    "TunePoint",
+    "TuneResult",
+    "tune_scenario",
 ]

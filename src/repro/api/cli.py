@@ -12,9 +12,18 @@ machine-readable ``BENCH_scenarios.json``:
   (``ArchDef.to_scenarios``), optionally restricted by ``--shape`` /
   ``--dataflows``.
 
-Exit status is non-zero on schema errors, on any ``expect`` golden-drift
-mismatch, and on any failed §10 conformance check — so a checked-in batch
-file is a CI gate (see ``.github/workflows/ci.yml``).
+A fourth mode, ``--tune batch.json``, runs the §15 design-space
+auto-tuner: every scenario in the batch must carry an ``{"optimize":
+...}`` block, and the CLI prints one tuned row per scenario (winning
+configuration, objective, SRAM working set, search statistics) instead
+of plain totals.  ``--json BENCH_tune.json`` emits the full search
+records including the movement-vs-SRAM Pareto frontier.
+
+Exit status is non-zero on schema errors (2: unknown optimize axis,
+negative budget, non-finite objective weight, infeasible budget, ...),
+on any ``expect`` golden-drift mismatch (1), and on any failed §10
+conformance check (1) — so a checked-in batch file is a CI gate (see
+``.github/workflows/ci.yml``).
 """
 
 from __future__ import annotations
@@ -92,6 +101,37 @@ def _print_rows(res: BatchResult) -> None:
     print(buf.getvalue(), end="")
 
 
+def _print_tune_rows(res: BatchResult) -> None:
+    rows = []
+    for r in res.results:
+        t = r.meta["tune"]
+        best = t["best"]
+        rows.append({
+            "label": r.scenario.label, "workload": r.scenario.workload,
+            "graph_kind": r.scenario.graph_kind,
+            "best_dataflow": best["dataflow"],
+            "best_tile_vertices": best["tile_vertices"],
+            "best_n_tiles": best.get("n_tiles"),
+            "residency": best["residency"],
+            "halo_dedup": best["halo_dedup"],
+            "objective": best["objective"],
+            "sram_bits": best["sram_bits"],
+            "total_bits": r.total_bits,
+            "method": t["method"],
+            "n_candidates": t["n_candidates"],
+            "n_feasible": t["n_feasible"],
+            "n_groups": t["n_groups"],
+            "frontier_size": len(t["frontier"]),
+        })
+    cols = list(rows[0]) if rows else []
+    buf = io.StringIO()
+    w = csv.DictWriter(buf, fieldnames=cols)
+    w.writeheader()
+    for row in rows:
+        w.writerow(row)
+    print(buf.getvalue(), end="")
+
+
 def main(argv: Optional[Sequence[str]] = None) -> int:
     ap = argparse.ArgumentParser(
         prog="python -m repro.api",
@@ -104,6 +144,10 @@ def main(argv: Optional[Sequence[str]] = None) -> int:
                     help=f"named template: {', '.join(template_names())}")
     ap.add_argument("--workload", action="append", metavar="ARCH",
                     help="workload config bridge (repro.configs name)")
+    ap.add_argument("--tune", action="append", metavar="PATH",
+                    help="tune batch JSON (repeatable): every scenario "
+                         "must carry an {'optimize': ...} block; prints "
+                         "one tuned row per scenario (§15)")
     ap.add_argument("--shape", action="append", metavar="SHAPE",
                     help="restrict --workload to these shapes (repeatable)")
     ap.add_argument("--dataflows", default=None, metavar="A,B,C",
@@ -118,8 +162,12 @@ def main(argv: Optional[Sequence[str]] = None) -> int:
 
     if args.list:
         _print_listing()
-        if not (args.scenario or args.template or args.workload):
+        if not (args.scenario or args.template or args.workload
+                or args.tune):
             return 0
+
+    if args.tune:
+        return _tune_main(args)
 
     try:
         scenarios = build_scenarios(args)
@@ -153,6 +201,59 @@ def main(argv: Optional[Sequence[str]] = None) -> int:
             status = 1
             print(f"# CONFORMANCE FAILURE {r.scenario.dataflow}: "
                   f"{r.conformance}", file=sys.stderr)
+
+    if args.json is not None:
+        payload = res.to_dict()
+        payload["status"] = "ok" if status == 0 else "failed"
+        with open(args.json, "w") as f:
+            json.dump(payload, f, indent=2, sort_keys=True)
+            f.write("\n")
+        print(f"# wrote {args.json}")
+    return status
+
+
+def _tune_main(args: argparse.Namespace) -> int:
+    """The ``--tune`` mode: every scenario must be an optimize scenario."""
+    if args.scenario or args.template or args.workload:
+        print("error: --tune is its own mode; a tune batch cannot be "
+              "combined with --scenario/--template/--workload sources",
+              file=sys.stderr)
+        return 2
+    try:
+        scenarios: list[Scenario] = []
+        for path in args.tune:
+            scenarios.extend(load_scenarios(path))
+        if not scenarios:
+            raise ValueError("no scenarios in the tune batch")
+        for i, s in enumerate(scenarios):
+            if s.optimize is None:
+                raise ValueError(
+                    f"tune scenario #{i} ({s.label or s.dataflow}) has no "
+                    "'optimize' block; use --scenario for plain "
+                    "evaluation")
+    except (ValueError, TypeError, KeyError, OSError) as exc:
+        print(f"error: {exc}", file=sys.stderr)
+        return 2
+    try:
+        res = evaluate_scenarios(scenarios)
+    except (ValueError, TypeError, KeyError) as exc:
+        # Includes InfeasibleBudgetError (a typed ValueError): a budget
+        # below every configuration's working set is a client error.
+        print(f"error: {exc}", file=sys.stderr)
+        return 2
+
+    _print_tune_rows(res)
+    n_cands = sum(r.meta["tune"]["n_candidates"] for r in res.results)
+    n_groups = sum(r.meta["tune"]["n_groups"] for r in res.results)
+    print(f"# {len(res.results)} tunes over {n_cands} candidate "
+          f"configurations in {n_groups} broadcast evaluations")
+
+    status = 0
+    for scenario, fails in res.expect_failures():
+        status = 1
+        name = scenario.label or scenario.workload or scenario.dataflow
+        for f in fails:
+            print(f"# GOLDEN DRIFT {name}: {f}", file=sys.stderr)
 
     if args.json is not None:
         payload = res.to_dict()

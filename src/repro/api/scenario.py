@@ -36,6 +36,16 @@ pins totals (``total_bits`` / ``total_iterations``) so a checked-in
 scenario file doubles as a golden-drift gate (the CLI exits non-zero on
 mismatch); ``conformance`` requests the DESIGN.md §10 measured-vs-modeled
 check for dataflows with a runnable kernel analogue.
+
+A fourth block, ``optimize`` (DESIGN.md §15), turns a full-graph or
+trace scenario into a *search request*: ``{"optimize": {"objective":
+"movement", "budget": {"sram_bits": ...}, "space": {...}}}`` asks the
+planner for the objective-minimizing (dataflow, tile capacity,
+residency, halo policy) configuration within the space, evaluated by
+:mod:`repro.core.tune`.  The block is normalized at construction
+(:func:`repro.core.tune.normalize_optimize`) so it stays pure data;
+optimize scenarios may additionally pin ``expect.objective`` /
+``expect.best_dataflow`` / ``expect.best_tile_vertices``.
 """
 
 from __future__ import annotations
@@ -282,9 +292,17 @@ class Scenario:
       composition: optional §7 policy (layer widths / residency / tiling).
       conformance: request the §10 measured-vs-modeled check (one
         operating point) for dataflows with a runnable kernel analogue.
-      expect: optional pinned totals (``total_bits``, ``total_iterations``)
-        — the golden-drift gate for checked-in scenario files.
+      expect: optional pinned totals (``total_bits``, ``total_iterations``;
+        plus ``objective`` / ``best_dataflow`` / ``best_tile_vertices``
+        for optimize scenarios) — the golden-drift gate for checked-in
+        scenario files.
       label / workload: free-form identification carried through results.
+      optimize: optional §15 search block (``objective`` / ``budget`` /
+        ``space`` / ``method``); normalized via
+        :func:`repro.core.tune.normalize_optimize`.  The planner routes
+        optimize scenarios through the tuner; ``dataflow`` and the
+        composition then act as the search's base point (axes missing
+        from the space pin to their values).
     """
 
     dataflow: str
@@ -295,6 +313,7 @@ class Scenario:
     expect: Optional[Mapping[str, float]] = None
     label: str = ""
     workload: str = ""
+    optimize: Optional[Mapping[str, Any]] = None
 
     def __post_init__(self) -> None:
         if not isinstance(self.dataflow, str) or not self.dataflow:
@@ -333,15 +352,55 @@ class Scenario:
                     "halo_dedup must stay 1 for a trace scenario: the "
                     "exact schedule already deduplicates remote sources "
                     "per tile, so a divisor would double-count the dedup")
+        if self.optimize is not None:
+            # The schema lives next to the engine that interprets it
+            # (repro.core.tune is import-light: stdlib + numpy).
+            from repro.core.tune import normalize_optimize
+            opt = normalize_optimize(self.optimize)
+            object.__setattr__(self, "optimize", opt)
+            if kind == "tile":
+                raise ValueError(
+                    "an optimize block needs a full-graph or trace "
+                    "scenario: the search axes (tile capacity, residency, "
+                    "halo policy) are composition-layer knobs with no "
+                    "meaning for a single Table-II tile")
+            if self.conformance:
+                raise ValueError(
+                    "optimize and conformance are mutually exclusive on "
+                    "one scenario: run the §10 check on the tuned winner "
+                    "as a concrete scenario instead")
+            space = opt["space"]
+            if kind == "trace":
+                for h in space.get("halo_dedup", ()):
+                    if h != 1.0:
+                        raise ValueError(
+                            "space.halo_dedup must stay [1] for a trace "
+                            "scenario: the exact schedule already "
+                            "deduplicates remote sources per tile")
+            if ("resident" in space.get("residency", ())
+                    and self.composition.widths is None):
+                raise ValueError(
+                    "space.residency includes 'resident' but the scenario "
+                    "has no layer widths; residency governs inter-layer "
+                    "hand-off, so give composition.widths")
         if self.expect is not None:
             known = {"total_bits", "total_iterations"}
+            if self.optimize is not None:
+                known |= {"objective", "best_dataflow", "best_tile_vertices"}
             unknown = set(self.expect) - known
             if unknown:
                 raise ValueError(f"unknown expect keys {sorted(unknown)}; "
                                  f"expected a subset of {sorted(known)}")
-            object.__setattr__(self, "expect",
-                               {k: _require_number(v, f"expect.{k}")
-                                for k, v in dict(self.expect).items()})
+            normalized: dict[str, Any] = {}
+            for k, v in dict(self.expect).items():
+                if k == "best_dataflow":
+                    if not isinstance(v, str) or not v:
+                        raise ValueError(f"expect.best_dataflow must be a "
+                                         f"non-empty dataflow name, got {v!r}")
+                    normalized[k] = v
+                else:
+                    normalized[k] = _require_number(v, f"expect.{k}")
+            object.__setattr__(self, "expect", normalized)
 
     # -- constructors -----------------------------------------------------
     @classmethod
@@ -409,6 +468,13 @@ class Scenario:
             (k, tuple(sorted(v.items())) if isinstance(v, Mapping) else v)
             for k, v in sorted(self.graph.items()))
 
+    def _optimize_key(self) -> Optional[str]:
+        """Canonical (sorted-JSON) form of the normalized optimize block."""
+        if self.optimize is None:
+            return None
+        return json.dumps(self.optimize, sort_keys=True,
+                          separators=(",", ":"))
+
     def __hash__(self) -> int:
         # frozen=True would auto-hash over the dict fields and raise; hash
         # the canonical tuple instead so scenarios work in sets/dict keys.
@@ -416,7 +482,8 @@ class Scenario:
                   else tuple(sorted(self.expect.items())))
         return hash((self.dataflow, self._graph_key(),
                      tuple(sorted(self.hardware.items())), self.composition,
-                     self.conformance, expect, self.label, self.workload))
+                     self.conformance, expect, self.label, self.workload,
+                     self._optimize_key()))
 
     @property
     def graph_kind(self) -> str:
@@ -443,6 +510,12 @@ class Scenario:
         if self.graph_kind == "trace":
             key += (self.graph["dataset"],
                     tuple(sorted(self.graph["params"].items())))
+        if self.optimize is not None:
+            # An optimize scenario is a search request, not a concrete
+            # evaluation: it never batches with plain scenarios (the
+            # planner routes it through repro.core.tune), and two
+            # searches share a key only for identical canonical blocks.
+            key += ("optimize", self._optimize_key())
         return key
 
     # -- serialization ----------------------------------------------------
@@ -462,12 +535,16 @@ class Scenario:
             out["label"] = self.label
         if self.workload:
             out["workload"] = self.workload
+        if self.optimize is not None:
+            # Deep-copy through JSON: the normalized block is JSON-able
+            # by construction and the caller must not alias our state.
+            out["optimize"] = json.loads(self._optimize_key())
         return out
 
     @classmethod
     def from_dict(cls, data: Mapping[str, Any]) -> "Scenario":
         known = {"dataflow", "graph", "hardware", "composition",
-                 "conformance", "expect", "label", "workload"}
+                 "conformance", "expect", "label", "workload", "optimize"}
         unknown = set(data) - known
         if unknown:
             raise ValueError(f"unknown Scenario keys {sorted(unknown)}; "
@@ -486,6 +563,7 @@ class Scenario:
             expect=data.get("expect"),
             label=data.get("label", ""),
             workload=data.get("workload", ""),
+            optimize=data.get("optimize"),
         )
 
     def to_json(self, **json_kw: Any) -> str:
@@ -521,6 +599,7 @@ def _trusted_tile(dataflow: str, graph: Mapping[str, float],
     set_(s, "expect", None)
     set_(s, "label", label)
     set_(s, "workload", workload)
+    set_(s, "optimize", None)
     set_(s, "_graph_kind", "tile")
     return s
 

@@ -305,6 +305,39 @@ def cora_trace(
                                "residency": residency, "dataset": "cora"})
 
 
+def tune_cora(
+        tile_vertices: Optional[np.ndarray] = None,
+        widths: Sequence[float] = (1433, 16, 7),
+        V: float = 2708, E: float = 10556,
+        sram_bits: Optional[float] = None) -> TemplateBatch:
+    """§15 auto-tune of the L-layer GCN-on-Cora workload.
+
+    One optimize scenario searching (all dataflows) x (capacity sweep) x
+    (both residencies): with ``sram_bits`` unset the budget is left open
+    and the result carries the movement-vs-SRAM Pareto frontier; set a
+    budget to get the cheapest configuration that fits.
+    """
+    caps = np.atleast_1d(_f64(np.array([256, 512, 1024, 2048], np.float64)
+                              if tile_vertices is None else tile_vertices))
+    widths = tuple(float(w) for w in widths)
+    optimize = {
+        "objective": "movement",
+        "space": {"dataflow": "all",
+                  "tile_vertices": [float(c) for c in caps],
+                  "residency": ["spill", "resident"]},
+    }
+    if sram_bits is not None:
+        optimize["budget"] = {"sram_bits": float(sram_bits)}
+    scenario = Scenario.full_graph(
+        registry.names()[0], V=V, E=E, N=widths[0], T=widths[-1],
+        tile_vertices=float(caps[0]), widths=widths,
+        label="tune-cora-gcn", workload="gcn-cora",
+        optimize=optimize)
+    return TemplateBatch(figure="tune_cora", scenarios=(scenario,),
+                         axes={"tile_vertices": caps},
+                         meta={"widths": widths, "optimize": optimize})
+
+
 TEMPLATES: dict[str, Callable[..., TemplateBatch]] = {
     "fig3": fig3,
     "fig4": fig4,
@@ -315,6 +348,7 @@ TEMPLATES: dict[str, Callable[..., TemplateBatch]] = {
     "comparison": comparison,
     "cora_end_to_end": cora_end_to_end,
     "cora_trace": cora_trace,
+    "tune_cora": tune_cora,
 }
 
 

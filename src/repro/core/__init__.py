@@ -33,7 +33,7 @@ hardware x composition) cross-product in one broadcast call per dataflow.
 from . import registry
 from .awb_gcn import AWBGCNModel, AWB_GCN_SPEC
 from .compose import (FullGraphParams, MultiLayerModel, RESIDENCY_POLICIES,
-                      TiledGraphModel)
+                      TiledGraphModel, tile_working_set_bits)
 from .conformance import (ConformanceRecord, OperatingPoint,
                           default_operating_points, run_conformance,
                           summarize_records)
@@ -46,8 +46,12 @@ from .notation import (AWBGCNHardwareParams, EnGNHardwareParams,
                        PAPER_DEFAULT_HYGCN, TiledSpMMHardwareParams,
                        paper_default_graph)
 from .spmm_tiled import SPMM_TILED_SPEC, TiledSpMMModel
-from .trace import (GraphTrace, TraceSchedule, register_trace_dataset,
-                    resolve_trace_dataset, trace_dataset_names)
+from .trace import (GraphTrace, TraceSchedule, clear_trace_cache,
+                    register_trace_dataset, reset_trace_stats,
+                    resolve_trace_dataset, trace_cache_info,
+                    trace_dataset_names)
+from .tune import (InfeasibleBudgetError, TunePoint, TuneResult,
+                   normalize_optimize, tune_scenario)
 from .spmm_unfused import SPMM_UNFUSED_SPEC, UnfusedSpMMModel
 from .terms import (AcceleratorModel, L1_CLASSES, L2_CLASSES, CACHE_CLASSES,
                     ModelOutput, MovementTerm, tabulate)
@@ -81,12 +85,22 @@ __all__ = [
     "TiledGraphModel",
     "FullGraphParams",
     "RESIDENCY_POLICIES",
+    "tile_working_set_bits",
     # trace backend (exact edge-list schedules, DESIGN.md §12)
     "GraphTrace",
     "TraceSchedule",
     "register_trace_dataset",
     "resolve_trace_dataset",
     "trace_dataset_names",
+    "clear_trace_cache",
+    "reset_trace_stats",
+    "trace_cache_info",
+    # design-space auto-tuner (DESIGN.md §15)
+    "InfeasibleBudgetError",
+    "TunePoint",
+    "TuneResult",
+    "normalize_optimize",
+    "tune_scenario",
     # notation
     "GraphTileParams",
     "EnGNHardwareParams",

@@ -41,6 +41,7 @@ __all__ = [
     "TiledGraphModel",
     "FullGraphParams",
     "RESIDENCY_POLICIES",
+    "tile_working_set_bits",
 ]
 
 RESIDENCY_POLICIES = ("spill", "resident")
@@ -171,6 +172,63 @@ class MultiLayerModel:
             meta={"hw": hw, "graph": graph, "spec": self.spec,
                   "widths": self.widths, "residency": self.residency},
         )
+
+
+def tile_working_set_bits(tile_vertices, *, V, widths, sigma,
+                          residency: str = "spill", halo_dedup=1.0):
+    """Closed-form on-chip working set (bits) of one tile pass (§15).
+
+    The SRAM a configuration must hold to run one tile of the schedule
+    (the tuner's feasibility model; broadcasting like every other closed
+    form, so a capacity array sweeps in one call):
+
+    * **weights** — ``sigma * sum_l widths[l] * widths[l+1]``: every
+      layer's dense weight matrix is resident for the whole pass.
+    * **activations** — per-vertex features for the tile's ``K =
+      ceil(V / ceil(V / tile_vertices))`` vertices.  ``"spill"`` holds
+      one layer's input and output at a time, so the peak is
+      ``K * max_l (widths[l] + widths[l+1])``; ``"resident"`` keeps every
+      interior activation on-array: ``K * sum(widths)``.
+    * **halo-dedup cache** — ``halo_dedup > 1`` presumes a cache holding
+      reused remote source features within a tile pass; it is charged
+      ``K * widths[0] * (1 - 1/halo_dedup)`` (the fraction of halo
+      traffic the divisor claims to serve from on-chip).
+
+    ``K`` uses the same balanced-partition geometry as
+    :meth:`TiledGraphModel.tile_schedule` and
+    ``GraphTrace._geometry``, so feasibility and movement agree on what
+    a "tile" is.
+    """
+    if residency not in RESIDENCY_POLICIES:
+        raise ValueError(f"unknown residency {residency!r}; "
+                         f"expected one of {RESIDENCY_POLICIES}")
+    w = [_f64(x) for x in widths]
+    if len(w) < 2:
+        raise ValueError(f"need >= 2 widths (got {list(widths)}): "
+                         "a layer maps widths[l] -> widths[l+1]")
+    tv = _f64(tile_vertices)
+    if not np.all(np.isfinite(tv)) or np.any(tv < 1):
+        raise ValueError(f"tile_vertices must be >= 1, got {tile_vertices!r}")
+    hd = _f64(halo_dedup)
+    if not np.all(np.isfinite(hd)) or np.any(hd < 1.0):
+        raise ValueError(f"halo_dedup must be finite and >= 1, "
+                         f"got {halo_dedup!r}")
+    Vv = _f64(V)
+    n_tiles = np.maximum(ceil(Vv / tv), 1.0)
+    K = ceil(Vv / n_tiles)
+    weight_elems = _f64(0.0)
+    for l in range(len(w) - 1):
+        weight_elems = weight_elems + w[l] * w[l + 1]
+    if residency == "resident":
+        act_elems = _f64(0.0)
+        for wl in w:
+            act_elems = act_elems + wl
+    else:
+        act_elems = w[0] + w[1]
+        for l in range(1, len(w) - 1):
+            act_elems = np.maximum(act_elems, w[l] + w[l + 1])
+    halo_elems = w[0] * (1.0 - 1.0 / hd)
+    return _f64(sigma) * (weight_elems + K * (act_elems + halo_elems))
 
 
 @dataclass(frozen=True)

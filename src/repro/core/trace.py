@@ -66,6 +66,7 @@ __all__ = [
     "clear_trace_cache",
     "set_trace_cache_budget",
     "trace_cache_info",
+    "reset_trace_stats",
     "CORA_V",
     "CORA_E",
 ]
@@ -76,6 +77,29 @@ CORA_V = 2708
 CORA_E = 10556
 
 _ENGINES = ("numpy", "jax", "sharded")
+
+#: Process-wide work counters (observability, not behaviour): how many
+#: edge-list sorts, schedule computations, schedule-cache hits, and
+#: builder invocations actually happened.  The §15 tuner's cache-reuse
+#: regression gates on ``factorizations`` — a multi-capacity tune must
+#: never silently re-sort the edge list per candidate.
+_TRACE_STATS = {
+    "factorizations": 0,     # actual sorts (not disk-cache rehydrations)
+    "schedule_computes": 0,  # per-capacity O(U) boundary-flag passes
+    "schedule_cache_hits": 0,  # per-trace LRU hits
+    "schedule_disk_hits": 0,   # on-disk schedule_cache hits
+    "trace_builds": 0,       # dataset builder invocations (cold resolves)
+}
+
+
+def _bump_stat(name: str, n: int = 1) -> None:
+    _TRACE_STATS[name] += n
+
+
+def reset_trace_stats() -> None:
+    """Zero the process-wide trace work counters (see trace_cache_info)."""
+    for key in _TRACE_STATS:
+        _TRACE_STATS[key] = 0
 
 
 def _f64(x) -> np.ndarray:
@@ -496,6 +520,7 @@ class GraphTrace:
                 raise RuntimeError(
                     "factorization-only trace lost its factorization")
             elif V <= int((2**63 - 1) ** 0.5):
+                _bump_stat("factorizations")
                 # dtype pinned: int32 edge arrays must not decide the key
                 # width (the composite range is V^2, not V)
                 key = np.multiply(self.senders, V, dtype=np.int64)
@@ -512,6 +537,7 @@ class GraphTrace:
                 self._fact = self._finish_factorization(u_snd, u_rcv, idx, E)
             else:
                 # Composite keys would overflow int64: stable lexsort path.
+                _bump_stat("factorizations")
                 order = np.lexsort((self.receivers, self.senders))
                 snd_s = self.senders[order]
                 rcv_s = self.receivers[order]
@@ -592,6 +618,7 @@ class GraphTrace:
 
     def _compute_schedule(self, cap: int) -> TraceSchedule:
         """One capacity via the shared factorization: O(U) after the sort."""
+        _bump_stat("schedule_computes")
         n_tiles, K = self._geometry(cap)
         boundaries = self._tile_boundaries(n_tiles, K)
         vertex_counts = np.diff(boundaries).astype(np.float64)
@@ -620,6 +647,7 @@ class GraphTrace:
         sched = self._schedules.get(cap)
         if sched is not None:
             self._schedules.move_to_end(cap)
+            _bump_stat("schedule_cache_hits")
             return sched
         return self._schedule_from_disk(cap)
 
@@ -647,6 +675,7 @@ class GraphTrace:
         d = schedule_cache.load_schedule(key)
         if d is None:
             return None
+        _bump_stat("schedule_disk_hits")
         sched = TraceSchedule(
             n_tiles=d["n_tiles"], capacity=d["capacity"], K=d["K"],
             vertex_counts=d["vertex_counts"], edge_counts=d["edge_counts"],
@@ -738,6 +767,7 @@ class GraphTrace:
         n_pad = max(n_tiles for _, n_tiles, _ in geos)
         out = []
         for cap, n_tiles, K in geos:
+            _bump_stat("schedule_computes")
             halo, remote = segment_reduce.schedule_counts(
                 u_snd, u_rcv, u_new_src, mult, K, n_pad)
             boundaries = self._tile_boundaries(n_tiles, K)
@@ -761,6 +791,7 @@ class GraphTrace:
 
         out = []
         for cap in caps:
+            _bump_stat("schedule_computes")
             n_tiles, K = self._geometry(cap)
             boundaries = self._tile_boundaries(n_tiles, K)
             halo, remote = trace_shard.sharded_schedule_counts(
@@ -927,10 +958,14 @@ def set_trace_cache_budget(n_bytes: int) -> None:
 
 
 def trace_cache_info() -> dict:
-    """Entries / bytes / budget of the in-process resolved-trace LRU."""
+    """Entries / bytes / budget of the in-process resolved-trace LRU,
+    plus the process-wide work counters (``stats``: factorizations,
+    schedule computes/hits, builder invocations — see
+    :func:`reset_trace_stats`)."""
     return {"entries": len(_TRACE_CACHE),
             "bytes": int(sum(t.nbytes for t in _TRACE_CACHE.values())),
-            "budget_bytes": int(_TRACE_CACHE_BUDGET_BYTES)}
+            "budget_bytes": int(_TRACE_CACHE_BUDGET_BYTES),
+            "stats": dict(_TRACE_STATS)}
 
 
 def resolve_trace_dataset(name: str,
@@ -957,6 +992,7 @@ def resolve_trace_dataset(name: str,
             trace = GraphTrace._from_cached(payload)
             trace._disk_identity = (name, canonical, token)
     if trace is None:
+        _bump_stat("trace_builds")
         try:
             trace = _TRACE_DATASETS[name][0](**params)
         except TypeError as exc:
