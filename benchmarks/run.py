@@ -13,7 +13,11 @@ all-accelerator, full-graph composition, and workload-bridge sweeps —
 future PRs diff this file for the sweep engine's perf trajectory.  The
 JSON also carries a ``conformance`` block (one small measured-vs-modeled
 operating point, DESIGN.md §10); ``--skip-conformance`` drops it, and
-``python -m benchmarks.conformance`` runs the full sweep.
+``python -m benchmarks.conformance`` runs the full sweep.  An
+``analysis`` block summarizes the static model audit (DESIGN.md §16:
+per-dataflow unit/dead-hw/overflow counts, lint violations, mutation
+battery); ``--skip-analysis`` drops it, and ``python -m repro.analysis``
+is the full gate.
 """
 
 from __future__ import annotations
@@ -46,6 +50,8 @@ def main() -> None:
     ap.add_argument("--skip-roofline", action="store_true")
     ap.add_argument("--skip-conformance", action="store_true",
                     help="omit the conformance summary block from --json")
+    ap.add_argument("--skip-analysis", action="store_true",
+                    help="omit the model-audit summary block from --json")
     ap.add_argument("--json", nargs="?", const="BENCH_sweep.json", default=None,
                     metavar="PATH",
                     help="also write a timing summary JSON (default "
@@ -78,6 +84,24 @@ def main() -> None:
             records = run_conformance(
                 points=(OperatingPoint(256, 16, 8, 128, 128),))
             payload["conformance"] = summarize_records(records)
+        if not args.skip_analysis:
+            from repro.analysis import (audit_registry, lint_paths,
+                                        run_mutation_battery)
+            audits = audit_registry()
+            outcomes = run_mutation_battery()
+            payload["analysis"] = {
+                "dataflows": {
+                    name: {"ok": a.ok,
+                           "unit_errors": a.unit_error_count,
+                           "waived_unit_issues": a.waived_issue_count,
+                           "overflow_findings": a.overflow_count,
+                           "dead_hw": list(a.dead_hw),
+                           "waived_dead_hw": list(a.waived_dead_hw)}
+                    for name, a in sorted(audits.items())},
+                "lint_violations": len(lint_paths()),
+                "mutants_caught": sum(o.caught for o in outcomes),
+                "mutants_total": len(outcomes),
+            }
         with open(args.json, "w") as f:
             json.dump(payload, f, indent=2, sort_keys=True)
             f.write("\n")

@@ -14,6 +14,11 @@ HyGCN has.  Its absence of an inter-phase buffer (combination is chained
 behind aggregation on the same PEs) places its off-chip class close to
 EnGN's, while the rerouting term grows with imbalance — the trade the
 MICRO paper quantifies.
+
+Model-audit note (DESIGN.md §16): the symbolic auditor confirms no
+movement reads ``graph.L`` — correct by construction, since AWB-GCN has
+no high-degree vertex cache to size; reported as an informational unused
+graph symbol.
 """
 
 from __future__ import annotations

@@ -40,6 +40,13 @@ Measurement layers (each a ``ConformanceRecord.source``):
 Every record carries a *declared tolerance*: schedule and boundary sources
 are exact algebra over identical block geometry, so their tolerance is a
 float64 epsilon; one-sided sources declare the slack direction instead.
+
+This dynamic harness has a static counterpart: ``repro.analysis``
+(DESIGN.md §16) audits the same closed forms symbolically — unit
+consistency, symbol provenance, float64-exactness bounds — without
+compiling anything.  :func:`run_conformance` runs that audit as a
+preflight so byte measurements are never taken against a model that is
+already known to be mis-transcribed.
 """
 
 from __future__ import annotations
@@ -439,12 +446,32 @@ def interphase_delta_records(point: OperatingPoint, *, interpret: bool = True,
 def run_conformance(names: Iterable[str] | None = None,
                     points: Sequence[OperatingPoint] | None = None, *,
                     interpret: bool = True,
-                    include_delta: bool = True) -> list[ConformanceRecord]:
-    """The full harness: every runnable dataflow x every operating point."""
+                    include_delta: bool = True,
+                    preflight_audit: bool = True) -> list[ConformanceRecord]:
+    """The full harness: every runnable dataflow x every operating point.
+
+    With ``preflight_audit`` (the default) each dataflow is first passed
+    through the static model auditor (``repro.analysis``, DESIGN.md §16)
+    and the harness refuses to measure a model whose closed forms fail
+    the unit/provenance/golden audit — dynamic conformance numbers for a
+    statically broken model would only lend it false credibility.
+    """
     from . import registry
 
     if names is None:
         names = [s.name for s in registry.specs() if s.has_runnable]
+    else:
+        names = list(names)
+    if preflight_audit:
+        from repro.analysis import audit_spec
+
+        for name in names:
+            errors = audit_spec(registry.get(name)).strict_errors()
+            if errors:
+                raise AssertionError(
+                    f"static model audit failure for {name!r}; refusing to "
+                    "measure (rerun with preflight_audit=False to override): "
+                    + "; ".join(errors))
     points = default_operating_points() if points is None else points
     records: list[ConformanceRecord] = []
     measured: dict[tuple[str, OperatingPoint], list[dict]] = {}

@@ -123,6 +123,10 @@ ENGN_SPEC = DataflowSpec(
     hw_factory=EnGNHardwareParams,
     description="EnGN single-array RER dataflow with a high-degree vertex "
                 "cache (Table III).",
+    # M_prime (the paper's M') enters only the fitting-factor diagnostic
+    # (EnGNModel.fitting_factor), never a Table III movement row; B_star=None
+    # aliases B and is skipped by the tracer, so it is not listed here.
+    unused_hw=("M_prime",),
 )
 
 

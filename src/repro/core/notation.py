@@ -37,7 +37,82 @@ __all__ = [
     "PAPER_DEFAULT_ENGN",
     "PAPER_DEFAULT_HYGCN",
     "paper_default_graph",
+    "FieldUnit",
+    "UNIT_DECLARATIONS",
+    "declare_units",
+    "unit_declarations_for",
 ]
+
+
+# ---------------------------------------------------------------------------
+# Unit declarations (consumed by :mod:`repro.analysis`, DESIGN.md §16)
+#
+# Every Table II symbol is declared with (a) a unit tag and (b) the operating
+# envelope the static auditor propagates interval bounds over.  The paper's
+# iteration-granular convention is encoded here once: ``bits`` and
+# ``bits/iter`` both reduce to the ``bits`` dimension (B is the payload one
+# iteration can move), while counts (``elements``/``vertices``/``edges``/
+# ``PEs``) are dimensionless multipliers — so every Table III/IV data-movement
+# form must reduce to bits^1 and every iteration form to bits^0.  A dropped
+# ``sigma`` factor breaks that reduction (count x count products are not
+# bits), which is exactly what the auditor hard-fails on.
+#
+# Graph symbols carry the ROADMAP item-1 operating envelope (10^9 edges /
+# 10^7 vertices); hardware symbols default to ``lo=hi=None``, meaning the
+# auditor pins them to the spec's own ``hw_factory()`` defaults (a point
+# interval at the published design point).
+# ---------------------------------------------------------------------------
+
+@dataclass(frozen=True)
+class FieldUnit:
+    """Unit + envelope declaration of one parameter-record field.
+
+    ``unit`` is one of the Table II tags: ``"bits"``, ``"bits/iter"``,
+    ``"elements"``, ``"vertices"``, ``"edges"``, ``"PEs"``,
+    ``"dimensionless"``.  ``lo``/``hi`` bound the field over the audited
+    operating envelope; ``None`` means "pin to the record's default value".
+    """
+
+    unit: str
+    lo: float | None = None
+    hi: float | None = None
+    doc: str = ""
+
+
+#: record type -> {field name -> FieldUnit}.  Extend via :func:`declare_units`.
+UNIT_DECLARATIONS: dict[type, dict[str, FieldUnit]] = {}
+
+
+def declare_units(record_type: type, fields: dict[str, FieldUnit],
+                  *, overwrite: bool = False) -> None:
+    """Register unit declarations for a parameter-record dataclass.
+
+    Third-party dataflow specs whose hardware records are not declared here
+    must call this before :func:`repro.analysis.audit_spec` can trace them.
+    """
+    if record_type in UNIT_DECLARATIONS and not overwrite:
+        raise ValueError(f"unit declarations for {record_type.__name__} "
+                         "already registered (pass overwrite=True)")
+    declared = set(fields)
+    actual = {f.name for f in dataclasses.fields(record_type)}
+    if declared != actual:
+        raise ValueError(
+            f"unit declarations for {record_type.__name__} must cover every "
+            f"field exactly once; missing={sorted(actual - declared)} "
+            f"extra={sorted(declared - actual)}")
+    UNIT_DECLARATIONS[record_type] = dict(fields)
+
+
+def unit_declarations_for(record) -> dict[str, FieldUnit]:
+    """Resolve the declaration table for a record instance (exact type)."""
+    try:
+        return UNIT_DECLARATIONS[type(record)]
+    except KeyError:
+        raise KeyError(
+            f"no unit declarations for parameter record type "
+            f"{type(record).__name__}; call repro.core.notation."
+            f"declare_units({type(record).__name__}, {{...}}) so the "
+            f"analysis auditor can trace specs using it") from None
 
 
 def _f64(x: ParamArray) -> np.ndarray:
@@ -214,3 +289,51 @@ def paper_default_graph(
 PAPER_DEFAULT_GRAPH = paper_default_graph()
 PAPER_DEFAULT_ENGN = EnGNHardwareParams()
 PAPER_DEFAULT_HYGCN = HyGCNHardwareParams()
+
+
+# Table II, left column: the graph tile, over the ROADMAP item-1 envelope
+# (10^9-edge / 10^7-vertex graphs; feature widths up to 1024 elements).
+declare_units(GraphTileParams, {
+    "N": FieldUnit("elements", 1, 1024, "input feature-vector size"),
+    "T": FieldUnit("elements", 1, 1024, "output feature-vector size"),
+    "K": FieldUnit("vertices", 1, 1e7, "vertices in the tile"),
+    "L": FieldUnit("vertices", 0, 1e7, "high-degree vertices in the tile"),
+    "P": FieldUnit("edges", 0, 1e9, "edges in the tile"),
+})
+
+# Table II, right column (EnGN).
+declare_units(EnGNHardwareParams, {
+    "sigma": FieldUnit("bits", doc="precision of one feature element"),
+    "B": FieldUnit("bits/iter", doc="L2 bank bandwidth"),
+    "B_star": FieldUnit("bits/iter", doc="dedicated L2* cache bandwidth"),
+    "M": FieldUnit("PEs", doc="PE-array rows"),
+    "M_prime": FieldUnit("PEs", doc="PE-array columns"),
+})
+
+# Table II, right column (HyGCN).
+declare_units(HyGCNHardwareParams, {
+    "sigma": FieldUnit("bits", doc="precision of one feature element"),
+    "B": FieldUnit("bits/iter", doc="L2 memory bandwidth"),
+    "Ma": FieldUnit("PEs", doc="aggregation-engine SIMD cores"),
+    "Mc": FieldUnit("PEs", doc="combination-engine systolic PEs"),
+    "gamma": FieldUnit("dimensionless", doc="systolic weight-reuse factor"),
+    "Ps_ratio": FieldUnit("dimensionless",
+                          doc="edges surviving window sliding, / P"),
+})
+
+# This repo's extensions (DESIGN.md §7).
+declare_units(TiledSpMMHardwareParams, {
+    "sigma": FieldUnit("bits", doc="precision of one feature element"),
+    "B": FieldUnit("bits/iter", doc="HBM bandwidth"),
+    "Bn": FieldUnit("vertices", doc="destination rows per adjacency block"),
+    "Bk": FieldUnit("vertices", doc="source columns per adjacency block"),
+    "sigma_adj": FieldUnit("bits", doc="precision of one adjacency element"),
+})
+
+declare_units(AWBGCNHardwareParams, {
+    "sigma": FieldUnit("bits", doc="precision of one feature element"),
+    "B": FieldUnit("bits/iter", doc="L2 memory bandwidth"),
+    "M": FieldUnit("PEs", doc="column-product PEs"),
+    "eta": FieldUnit("dimensionless", doc="autotuned balance efficiency"),
+    "rho": FieldUnit("dimensionless", doc="rerouted partial-result fraction"),
+})

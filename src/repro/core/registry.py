@@ -14,6 +14,13 @@ Built-in entries: ``engn`` and ``hygcn`` (Tables III/IV of the paper),
 The two spmm dataflows declare runnable kernel analogues
 (``DataflowSpec.runnable``), which the conformance subsystem
 (:mod:`repro.core.conformance`, DESIGN.md §10) pins to measured bytes.
+
+Every registered spec is also subject to the static model auditor
+(:mod:`repro.analysis`, DESIGN.md §16): ``python -m repro.analysis
+--strict`` symbolically re-derives units and symbol provenance for each
+movement form.  Audits key on the spec *value* (specs are frozen
+dataclasses), so swapping a spec in — including via
+:func:`temporarily_registered` — always triggers a fresh audit.
 """
 
 from __future__ import annotations

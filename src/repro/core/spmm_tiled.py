@@ -13,6 +13,12 @@ streams ``ceil(K/Bn)*ceil(K/Bk)`` full dense blocks regardless of sparsity,
 where EnGN/HyGCN stream only the P edges.  The comparison between
 ``loadadjblocks`` here and ``loadedges`` there is exactly the
 density-threshold question the kernel's DESIGN.md §3 entry records.
+
+Model-audit note (DESIGN.md §16): the symbolic auditor confirms these
+forms read neither ``graph.P`` nor ``graph.L`` — by construction, not
+omission: block-dense traffic is sparsity-independent (no P), and there
+is no high-degree vertex cache (no L).  ``python -m repro.analysis``
+reports both as informational unused graph symbols.
 """
 
 from __future__ import annotations

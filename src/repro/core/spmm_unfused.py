@@ -22,6 +22,11 @@ aggregation materializes each destination vertex's aggregate exactly once,
 so the combination pass re-reads K dense rows rather than P_s edge-wise
 gathers — the analogue realizes the paper's ``P_s*N*sigma`` read term at
 ``P_s = K`` (DESIGN.md §10).
+
+Model-audit note (DESIGN.md §16): like :mod:`repro.core.spmm_tiled`,
+these forms are independent of ``graph.P``/``graph.L`` by construction
+(sparsity-independent block streaming, no vertex cache); the auditor
+lists both as informational unused graph symbols.
 """
 
 from __future__ import annotations

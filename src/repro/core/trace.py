@@ -190,7 +190,8 @@ class TraceSchedule:
             pair_tile, pair_count = self._pair_source()
             # Stable sort: ties in (tile, -count) keep the provider's
             # source-ascending order, matching the np.unique reference.
-            order = np.lexsort((-pair_count, pair_tile))
+            # U-sized (unique pairs), not E-sized — outside the ban's scope.
+            order = np.lexsort((-pair_count, pair_tile))  # lint: allow-trace-lexsort
             pt = pair_tile[order]
             pc = pair_count[order]
             seg_ptr = np.searchsorted(pt, np.arange(self.n_tiles + 1))
@@ -355,10 +356,11 @@ class GraphTrace:
                 raise ValueError(f"row_ptr must have shape ({n_nodes + 1},), "
                                  f"got {obj.row_ptr.shape}")
         else:
-            # Exact integer counts: multiplicities are ints <= E < 2^53,
-            # so the float64 weighted bincount loses nothing.
-            counts = np.bincount(u_rcv, weights=np.diff(mult_prefix),
-                                 minlength=n_nodes).astype(np.int64)
+            # Exact int64 accumulation: a weighted np.bincount would go
+            # through float64 and silently round multiplicity sums past
+            # 2^53 (pinned in tests/test_trace_engine.py).
+            counts = np.zeros(n_nodes, dtype=np.int64)
+            np.add.at(counts, u_rcv, np.diff(mult_prefix))
             obj.row_ptr = np.zeros(n_nodes + 1, dtype=np.int64)
             np.cumsum(counts, out=obj.row_ptr[1:])
         obj._csr_senders = None
@@ -440,12 +442,14 @@ class GraphTrace:
                     key %= V  # in place: the sorted keys become the columns
                     self._csr_senders = key
                 else:
-                    order = np.lexsort((self.senders, self.receivers))
+                    # V^2 would overflow the int64 composite key.
+                    order = np.lexsort((self.senders, self.receivers))  # lint: allow-trace-lexsort
                     self._csr_senders = np.asarray(
                         self.senders, dtype=np.int64)[order]
             else:
                 u_snd, u_rcv, _, mp = self._pair_factorization()
-                order = np.lexsort((u_snd, u_rcv))
+                # U-sized (unique pairs), not E-sized.
+                order = np.lexsort((u_snd, u_rcv))  # lint: allow-trace-lexsort
                 self._csr_senders = np.repeat(
                     np.asarray(u_snd, dtype=np.int64)[order],
                     np.diff(mp)[order])
@@ -474,8 +478,10 @@ class GraphTrace:
     def out_degrees(self) -> np.ndarray:
         if not self.has_edge_list:
             u_snd, _, _, mp = self._pair_factorization()
-            return np.bincount(u_snd, weights=np.diff(mp),
-                               minlength=self.n_nodes).astype(np.int64)
+            # int64-exact (a weighted bincount would round past 2^53)
+            deg = np.zeros(self.n_nodes, dtype=np.int64)
+            np.add.at(deg, u_snd, np.diff(mp))
+            return deg
         return np.bincount(self.senders, minlength=self.n_nodes)
 
     # -- the shared factorization (DESIGN.md §13) --------------------------
@@ -538,7 +544,7 @@ class GraphTrace:
             else:
                 # Composite keys would overflow int64: stable lexsort path.
                 _bump_stat("factorizations")
-                order = np.lexsort((self.receivers, self.senders))
+                order = np.lexsort((self.receivers, self.senders))  # lint: allow-trace-lexsort
                 snd_s = self.senders[order]
                 rcv_s = self.receivers[order]
                 change = np.empty(E, dtype=bool)
@@ -630,9 +636,13 @@ class GraphTrace:
             # the (pre-dedup) cut edges.
             halo_counts = np.bincount(
                 pair_tile[remote], minlength=n_tiles).astype(np.float64)
-            remote_edge_counts = np.bincount(
-                pair_tile[remote], weights=pair_count[remote],
-                minlength=n_tiles).astype(np.float64)
+            # int64 accumulation, float64 only at the boundary: a
+            # weighted bincount rounds in float64 *while summing*, which
+            # is lossier than one final cast for totals near 2^53.
+            rec = np.zeros(n_tiles, dtype=np.int64)
+            np.add.at(rec, pair_tile[remote],
+                      np.asarray(pair_count[remote], dtype=np.int64))
+            remote_edge_counts = rec.astype(np.float64)
         else:
             halo_counts = np.zeros(n_tiles, dtype=np.float64)
             remote_edge_counts = np.zeros(n_tiles, dtype=np.float64)
@@ -839,7 +849,7 @@ class GraphTrace:
             pair_tile[remote_pair], minlength=n_tiles).astype(np.float64)
         # Eager ranking, exactly as PR 4 paid it per capacity (the new
         # engines defer this to the first cache-hit query).
-        order = np.lexsort((-pair_count, pair_tile))
+        order = np.lexsort((-pair_count, pair_tile))  # lint: allow-trace-lexsort
         ranked_tile = pair_tile[order]
         ranked_count = pair_count[order]
         seg_ptr = np.searchsorted(ranked_tile, np.arange(n_tiles + 1))

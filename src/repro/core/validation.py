@@ -109,7 +109,7 @@ def validate_dataflow_golden(name: str) -> ValidationRecord:
 
 
 def crosscheck_registry(graph=None, *, conformance: bool = False,
-                        conformance_points=None
+                        conformance_points=None, analysis: bool = False
                         ) -> dict[str, "ValidationRecord | None"]:
     """Structural sanity over every registered dataflow at one operating point.
 
@@ -122,6 +122,14 @@ def crosscheck_registry(graph=None, *, conformance: bool = False,
     small point, so the crosscheck stays cheap).  A failing conformance
     record raises; passing ones are summarized under ``"<name>::conformance"``
     keys as analytical-vs-measured HBM-byte totals.
+
+    With ``analysis=True``, every spec is additionally run through the
+    static model auditor (:mod:`repro.analysis`, DESIGN.md §16): symbolic
+    unit reduction, dead-hardware-parameter detection, and golden pinning.
+    A strict audit error raises; each passing :class:`~repro.analysis.
+    SpecAudit` is stored under ``"<name>::analysis"``.  Audits are cached
+    by spec value, so a spec swapped in via ``registry.temporarily_
+    registered`` is re-audited rather than served a stale result.
     """
     import numpy as np
 
@@ -159,4 +167,14 @@ def crosscheck_registry(graph=None, *, conformance: bool = False,
             records[f"{name}::conformance"] = ValidationRecord(
                 name=f"{name}_conformance_hbm",
                 analytical_bytes=analytical, measured_bytes=measured)
+    if analysis:
+        from repro.analysis import audit_spec
+
+        for name in registry.names():
+            audit = audit_spec(registry.get(name))
+            errors = audit.strict_errors()
+            if errors:
+                raise AssertionError(
+                    f"model audit failure for {name}: " + "; ".join(errors))
+            records[f"{name}::analysis"] = audit
     return records

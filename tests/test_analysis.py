@@ -1,0 +1,505 @@
+"""Model-auditor battery (DESIGN.md §16).
+
+What must hold, forever:
+
+* every registered dataflow audits clean under ``--strict`` — zero
+  unwaived unit errors, no undeclared dead hardware parameters, golden
+  totals pinned — and the *specific* waivers (HyGCN's two Table IV rows,
+  EnGN's M_prime) stay exactly as recorded;
+* the tracer itself is honest: mismatched units taint, ceil of a
+  non-dimensionless quantity is flagged, data-dependent branching
+  aborts, and interval bounds catch 2^53 crossings under a widened
+  envelope while the default ROADMAP envelope stays exactly
+  representable;
+* the AST linter fires on each forbidden construct, honors pragmas, and
+  reports the shipped tree clean;
+* the mutation battery catches 100% of generated mutants;
+* audit caching never serves a stale result for a re-registered
+  mutated spec (the satellite-4 contract);
+* the CLI's exit codes and JSON schema, and the DESIGN.md provenance
+  drift gate, behave as documented.
+"""
+
+import dataclasses
+import json
+import os
+import shutil
+import subprocess
+import sys
+from pathlib import Path
+
+import numpy as np
+import pytest
+
+from repro.analysis import (BITS, DIMENSIONLESS, FLOAT64_EXACT_MAX,
+                            SpecAudit, TraceAbort, TraceContext, Unit,
+                            analysis_cache_info, audit_registry, audit_spec,
+                            clear_analysis_cache, lint_paths, lint_source,
+                            mutate_spec, render_provenance,
+                            run_mutation_battery, trace_form, traced_record,
+                            unit_from_tag)
+from repro.analysis import lint as lint_mod
+from repro.analysis.__main__ import (PROVENANCE_BEGIN, PROVENANCE_END,
+                                     extract_committed_provenance)
+from repro.core import registry
+from repro.core.dataflow import MOVEMENT_ROLES, DataflowSpec, MovementSpec
+from repro.core.notation import (FieldUnit, GraphTileParams, declare_units,
+                                 paper_default_graph,
+                                 unit_declarations_for)
+from repro.core.terms import _VALID_HIERARCHIES
+from repro.core.validation import SEC4_GOLDEN_TOTALS, crosscheck_registry
+
+REPO = Path(__file__).resolve().parents[1]
+
+
+# ---------------------------------------------------------------------------
+# unit algebra
+# ---------------------------------------------------------------------------
+
+def test_unit_algebra():
+    assert BITS * DIMENSIONLESS == BITS
+    assert BITS / BITS == DIMENSIONLESS
+    assert (BITS * BITS).bits_exp == 2
+    assert str(BITS) == "bits"
+    assert str(DIMENSIONLESS) == "dimensionless"
+    assert str(Unit(2)) == "bits^2"
+    assert unit_from_tag("bits") == BITS
+    assert unit_from_tag("bits/iter") == BITS
+    for tag in ("elements", "vertices", "edges", "PEs", "dimensionless"):
+        assert unit_from_tag(tag) == DIMENSIONLESS
+    with pytest.raises(ValueError):
+        unit_from_tag("furlongs")
+
+
+def test_unit_declarations_cover_all_records():
+    g = paper_default_graph()
+    decls = unit_declarations_for(g)
+    assert set(decls) == {f.name for f in dataclasses.fields(g)}
+    for name in registry.names():
+        hw = registry.get(name).hw_factory()
+        decls = unit_declarations_for(hw)
+        assert set(decls) == {f.name for f in dataclasses.fields(hw)}, name
+
+
+def test_declare_units_rejects_field_mismatch():
+    @dataclasses.dataclass(frozen=True)
+    class Rec:
+        a: float = 1.0
+        b: float = 2.0
+
+    with pytest.raises(ValueError):
+        declare_units(Rec, {"a": FieldUnit("bits")})  # missing b
+    with pytest.raises(ValueError):
+        declare_units(Rec, {"a": FieldUnit("bits"), "b": FieldUnit("bits"),
+                            "c": FieldUnit("bits")})  # extra c
+    declare_units(Rec, {"a": FieldUnit("bits"), "b": FieldUnit("elements")})
+
+
+# ---------------------------------------------------------------------------
+# tracer semantics
+# ---------------------------------------------------------------------------
+
+def _traced_pair():
+    ctx = TraceContext(movement="t")
+    g = traced_record(paper_default_graph(), "graph", ctx)
+    hw = traced_record(registry.get("engn").hw_factory(), "hw", ctx)
+    return ctx, g, hw
+
+
+def test_tracer_unit_mismatch_taints_and_continues():
+    ctx, g, hw = _traced_pair()
+    bad = g.K + hw.sigma  # vertices + bits
+    assert len(ctx.issues) == 1
+    assert "mismatched units" in str(ctx.issues[0])
+    # tainted value adopts the first operand's unit and tracing continues
+    assert bad.unit == DIMENSIONLESS
+    more = bad * hw.sigma
+    assert more.unit == BITS
+    assert "graph.K" in more.symbols and "hw.sigma" in more.symbols
+
+
+def test_tracer_ceil_requires_dimensionless():
+    ctx, g, hw = _traced_pair()
+    np.ceil(g.K * hw.sigma)  # vertices * bits -> bits: flagged
+    assert any("ceil" in str(i) for i in ctx.issues)
+    n0 = len(ctx.issues)
+    np.ceil(g.K / g.L)  # dimensionless ratio: clean
+    assert len(ctx.issues) == n0
+
+
+def test_tracer_branching_aborts():
+    ctx, g, hw = _traced_pair()
+    with pytest.raises(TraceAbort):
+        bool(g.K > g.L)
+    with pytest.raises(TraceAbort):
+        float(g.K)
+
+
+def test_tracer_where_and_comparison():
+    ctx, g, hw = _traced_pair()
+    cond = g.K > g.L
+    assert cond.unit == DIMENSIONLESS and (cond.lo, cond.hi) == (0.0, 1.0)
+    merged = np.where(cond, g.K, g.L)
+    assert merged.unit == DIMENSIONLESS
+    assert {"graph.K", "graph.L"} <= set(merged.symbols)
+    # hull of the branches
+    assert merged.lo == 0.0 and merged.hi == 1e7
+
+
+def test_tracer_interval_overflow_records():
+    ctx, g, hw = _traced_pair()
+    big = g.P * g.K  # 1e9 * 1e7 = 1e16 > 2^53
+    assert big.hi > FLOAT64_EXACT_MAX
+    assert len(ctx.overflows) == 1
+    rec = ctx.overflows[0]
+    assert rec.op == "multiply"
+    assert {"graph.P", "graph.K"} <= set(rec.symbols)
+
+
+def test_trace_form_on_real_movement():
+    spec = registry.get("engn")
+    ctx = TraceContext(movement="engn.loadvertcache")
+    g = traced_record(paper_default_graph(), "graph", ctx)
+    hw = traced_record(spec.hw_factory(), "hw", ctx)
+    bits, iters = trace_form(spec.movement("loadvertcache").form, g, hw, ctx)
+    assert bits.unit == BITS and iters.unit == DIMENSIONLESS
+    assert not ctx.issues
+
+
+# ---------------------------------------------------------------------------
+# registry audits: the shipped models
+# ---------------------------------------------------------------------------
+
+@pytest.fixture(scope="module")
+def audits():
+    return audit_registry()
+
+
+def test_all_registered_specs_audit_clean(audits):
+    assert set(audits) == set(registry.names())
+    for name, a in audits.items():
+        assert a.strict_errors() == (), f"{name}: {a.strict_errors()}"
+        assert a.ok and a.golden_ok
+
+
+def test_hygcn_waivers_exactly_as_recorded(audits):
+    a = audits["hygcn"]
+    waived = {m.movement: len(m.unit_issues) for m in a.movements if m.waived}
+    assert waived == {"aggregate": 2, "readinterphase": 2}
+    assert a.unit_error_count == 0 and a.waived_issue_count == 4
+    for m in a.movements:
+        if m.waived:
+            assert "Table IV" in m.audit_note
+
+
+def test_engn_dead_hw_waiver(audits):
+    a = audits["engn"]
+    assert a.waived_dead_hw == ("M_prime",)
+    assert a.dead_hw == ()
+    # B_star=None aliases B: skipped by the tracer, never reported dead
+    assert "B_star" not in a.waived_dead_hw
+
+
+def test_unused_graph_symbols_by_construction(audits):
+    assert audits["awb_gcn"].unused_graph == ("L",)
+    assert audits["hygcn"].unused_graph == ("L",)
+    assert audits["spmm_tiled"].unused_graph == ("L", "P")
+    assert audits["spmm_unfused"].unused_graph == ("L", "P")
+    assert audits["engn"].unused_graph == ()
+
+
+def test_provenance_pins(audits):
+    lv = next(m for m in audits["engn"].movements
+              if m.movement == "loadvertcache")
+    assert lv.graph_symbols == ("L", "N")
+    assert lv.hw_symbols == ("B", "M", "sigma")
+    le = next(m for m in audits["awb_gcn"].movements
+              if m.movement == "loadedges")
+    assert le.graph_symbols == ("P",)
+
+
+def test_value_pins_match_golden_totals(audits):
+    for name, (total_bits, _) in SEC4_GOLDEN_TOTALS.items():
+        a = audits[name]
+        assert sum(m.value_bits for m in a.movements) == total_bits
+        assert a.golden_actual == total_bits
+
+
+def test_default_envelope_is_float64_exact(audits):
+    # ROADMAP item 1's envelope (P<=1e9, K/L<=1e7, N/T<=1024): every
+    # intermediate of every registered form stays under 2^53.
+    for name, a in audits.items():
+        assert a.overflow_count == 0, name
+        for m in a.movements:
+            assert m.bits_bound <= FLOAT64_EXACT_MAX, (name, m.movement)
+
+
+def test_widened_envelope_detects_overflow():
+    wide = {"N": (1.0, 4096.0), "T": (1.0, 4096.0)}
+    a = audit_spec(registry.get("engn"), envelope=wide)
+    assert a.overflow_count > 0
+    agg = next(m for m in a.movements if m.movement == "aggregate")
+    assert agg.overflows and max(o.bound for o in agg.overflows) > 2**53
+    # overflow findings are informational, not strict failures
+    assert a.strict_errors() == ()
+
+
+def test_audit_spec_flags_undeclared_dead_hw():
+    bare = dataclasses.replace(registry.get("engn"), unused_hw=())
+    a = audit_spec(bare, use_cache=False)
+    assert a.dead_hw == ("M_prime",)
+    assert any("M_prime" in e for e in a.strict_errors())
+
+
+# ---------------------------------------------------------------------------
+# caching x re-registration (satellite 4)
+# ---------------------------------------------------------------------------
+
+def test_audit_cache_hits_and_misses():
+    clear_analysis_cache()
+    spec = registry.get("awb_gcn")
+    a1 = audit_spec(spec)
+    info = analysis_cache_info()
+    assert info["misses"] >= 1 and info["entries"] >= 1
+    a2 = audit_spec(spec)
+    assert analysis_cache_info()["hits"] >= 1
+    assert a1 is a2
+    # a different envelope is a different cache slot, not a stale hit
+    a3 = audit_spec(spec, envelope={"P": (0.0, 1e12)})
+    assert a3 is not a1 and a3.envelope != a1.envelope
+
+
+def test_reregistered_mutated_spec_is_reaudited_not_stale():
+    base = registry.get("hygcn")
+    baseline = audit_spec(base)
+    assert baseline.ok
+    mutant = next(m for m in mutate_spec(base) if m.name == "drop-sigma")
+    swapped = dataclasses.replace(mutant.spec, name="hygcn")
+    with registry.temporarily_registered(swapped, overwrite=True):
+        assert registry.get("hygcn") is swapped
+        audited = audit_spec(registry.get("hygcn"))
+        # new form callables -> new cache key -> fresh (failing) audit
+        assert audited is not baseline
+        assert not audited.golden_ok
+        assert audited.strict_errors() != ()
+        with pytest.raises(AssertionError, match="model audit failure"):
+            crosscheck_registry(analysis=True)
+    # restored registry audits clean again (and hits the old cache entry)
+    assert audit_spec(registry.get("hygcn")) is baseline
+
+
+def test_crosscheck_registry_analysis_records():
+    records = crosscheck_registry(analysis=True)
+    for name in registry.names():
+        audit = records[f"{name}::analysis"]
+        assert isinstance(audit, SpecAudit) and audit.ok
+
+
+def test_conformance_preflight_refuses_broken_model():
+    # run_conformance statically audits before measuring: a mis-transcribed
+    # model must be rejected up front, not lent dynamic-conformance numbers.
+    from repro.core.conformance import run_conformance
+
+    base = registry.get("hygcn")
+    mutant = next(m for m in mutate_spec(base) if m.name == "drop-sigma")
+    swapped = dataclasses.replace(mutant.spec, name="hygcn")
+    with registry.temporarily_registered(swapped, overwrite=True):
+        with pytest.raises(AssertionError,
+                           match="static model audit failure for 'hygcn'"):
+            run_conformance(names=["hygcn"], points=())
+        # the documented override skips the gate: with the audit bypassed we
+        # get past it to the runnable-analogue step (hygcn declares none)
+        with pytest.raises(ValueError, match="declares no runnable"):
+            run_conformance(names=["hygcn"], points=(),
+                            preflight_audit=False)
+    # a clean registered model passes the preflight (empty points: gate only)
+    runnable = next(s.name for s in registry.specs() if s.has_runnable)
+    assert run_conformance(names=[runnable], points=()) == []
+
+
+# ---------------------------------------------------------------------------
+# mutation battery
+# ---------------------------------------------------------------------------
+
+def test_mutation_battery_catches_everything():
+    outcomes = run_mutation_battery()
+    assert outcomes, "battery generated no mutants"
+    escaped = [o for o in outcomes if not o.caught]
+    assert not escaped, escaped
+    by_spec = {(o.spec, o.mutant) for o in outcomes}
+    # drop-sigma and swap-NT apply to every spec...
+    for name in registry.names():
+        assert (name, "drop-sigma") in by_spec
+        assert (name, "swap-NT") in by_spec
+    # ...degenerate-minimum only where the baseline trace calls minimum
+    assert ("engn", "degenerate-minimum") in by_spec
+    assert ("hygcn", "degenerate-minimum") in by_spec
+    assert ("spmm_tiled", "degenerate-minimum") not in by_spec
+    assert ("spmm_unfused", "degenerate-minimum") not in by_spec
+
+
+def test_drop_sigma_is_caught_by_unit_checker():
+    outcomes = run_mutation_battery(specs=[registry.get("engn")])
+    drop = next(o for o in outcomes if o.mutant == "drop-sigma")
+    assert "unit-checker" in drop.caught_by
+    assert "golden-totals" in drop.caught_by
+
+
+# ---------------------------------------------------------------------------
+# linter
+# ---------------------------------------------------------------------------
+
+def test_lint_vocabularies_match_runtime():
+    assert set(lint_mod.VALID_HIERARCHIES) == set(_VALID_HIERARCHIES)
+    assert tuple(lint_mod.VALID_ROLES) == tuple(MOVEMENT_ROLES)
+
+
+def test_lint_builtin_min_in_form():
+    src = (
+        "def myform(g, hw):\n"
+        "    return min(g.K, hw.B), g.K\n"
+        "spec = MovementSpec('m', 'L2-L1', myform, role='edges')\n"
+    )
+    rules = [v.rule for v in lint_source(src, "core/x.py")]
+    assert rules == ["form-builtin-min"]
+    # the same builtin outside any form is not the linter's business
+    assert lint_source("def helper(a, b):\n    return min(a, b)\n") == []
+
+
+def test_lint_transitive_helper_and_math_ceil():
+    src = (
+        "import math\n"
+        "def _blocks(k):\n"
+        "    return math.ceil(k / 256) * max(k, 1)\n"
+        "def myform(g, hw):\n"
+        "    return _blocks(g.K), g.K\n"
+        "spec = MovementSpec('m', 'L2-L1', myform, role='edges')\n"
+    )
+    rules = sorted(v.rule for v in lint_source(src, "core/x.py"))
+    assert rules == ["form-builtin-max", "form-math-ceil"]
+
+
+def test_lint_lexsort_and_edge_list_rules():
+    src = "def f(a, b):\n    return np.lexsort((a, b))\n"
+    assert [v.rule for v in lint_source(src, "src/repro/core/trace.py")] \
+        == ["trace-lexsort"]
+    # outside a trace path the same code is fine
+    assert lint_source(src, "src/repro/core/sweep.py") == []
+    dist = "def stage(s, r):\n    return GraphTrace(senders=s, receivers=r)\n"
+    assert [v.rule for v in
+            lint_source(dist, "src/repro/distributed/x.py")] \
+        == ["trace-edge-list"]
+    ok = ("def stage(f):\n"
+          "    return GraphTrace.from_factorization(*f)\n")
+    assert lint_source(ok, "src/repro/distributed/x.py") == []
+
+
+def test_lint_pragma_suppression():
+    src = ("def f(a, b):\n"
+           "    return np.lexsort((a, b))  # lint: allow-trace-lexsort\n")
+    assert lint_source(src, "src/repro/core/trace.py") == []
+
+
+def test_lint_movement_vocab():
+    bad_h = "spec = MovementSpec('m', 'L3-L1', f, role='edges')\n"
+    assert [v.rule for v in lint_source(bad_h)] == ["movement-vocab"]
+    bad_r = "spec = MovementSpec('m', 'L2-L1', f, role='topology')\n"
+    assert [v.rule for v in lint_source(bad_r)] == ["movement-vocab"]
+    dyn = "spec = MovementSpec('m', HIER, f, role='edges')\n"
+    assert [v.rule for v in lint_source(dyn)] == ["movement-vocab"]
+    good = "spec = MovementSpec('m', 'L2-L1', f, role='edges')\n"
+    assert lint_source(good) == []
+
+
+def test_shipped_tree_lints_clean():
+    assert lint_paths() == []
+
+
+# ---------------------------------------------------------------------------
+# CLI + provenance drift gate
+# ---------------------------------------------------------------------------
+
+def _cli_env(pythonpath=None):
+    env = dict(os.environ)
+    env["PYTHONPATH"] = str(pythonpath or REPO / "src")
+    return env
+
+
+def _run_cli(*args, cwd=REPO):
+    return subprocess.run(
+        [sys.executable, "-m", "repro.analysis", *args],
+        capture_output=True, text=True, cwd=cwd, env=_cli_env())
+
+
+def test_cli_strict_passes_and_writes_json(tmp_path):
+    out = tmp_path / "BENCH_analysis.json"
+    r = _run_cli("--strict", "--json", str(out))
+    assert r.returncode == 0, r.stdout + r.stderr
+    payload = json.loads(out.read_text())
+    assert payload["schema"] == "repro.analysis/v1"
+    assert payload["ok"] is True
+    assert set(payload["dataflows"]) == set(registry.names())
+    assert payload["lint"]["violations"] == []
+    mb = payload["mutation_battery"]
+    assert mb["ran"] and mb["caught"] == mb["total"] > 0
+    hygcn = payload["dataflows"]["hygcn"]
+    assert hygcn["waived_unit_issues"] == 4 and hygcn["unit_errors"] == 0
+
+
+def test_cli_usage_errors_exit_2():
+    assert _run_cli("--check").returncode == 2
+    assert _run_cli("--provenance", "--check", "--write").returncode == 2
+
+
+def test_cli_provenance_check_current_and_tampered(tmp_path):
+    r = _run_cli("--provenance", "--check")
+    assert r.returncode == 0, r.stdout + r.stderr
+    # tamper with a committed row in a scratch copy -> stale, exit 1
+    scratch = tmp_path / "DESIGN.md"
+    shutil.copy(REPO / "DESIGN.md", scratch)
+    scratch.write_text(scratch.read_text().replace(
+        "| engn | loadedges |", "| engn | loadedgez |"))
+    r = _run_cli("--provenance", "--check", "--design", str(scratch))
+    assert r.returncode == 1
+    assert "STALE" in r.stderr
+    # --write repairs it in place
+    r = _run_cli("--provenance", "--write", "--design", str(scratch))
+    assert r.returncode == 0
+    r = _run_cli("--provenance", "--check", "--design", str(scratch))
+    assert r.returncode == 0
+
+
+def test_committed_appendix_matches_live_render():
+    committed = extract_committed_provenance((REPO / "DESIGN.md").read_text())
+    assert committed is not None, "DESIGN.md §16 appendix markers missing"
+    assert committed == render_provenance(audit_registry())
+
+
+def test_cli_strict_fails_on_escaped_model_error(tmp_path):
+    # A module registering a unit-broken spec must turn --strict red.
+    conftest = tmp_path / "sitecustomize.py"
+    conftest.write_text(
+        "import numpy as np\n"
+        "from repro.core import registry\n"
+        "from repro.core.dataflow import DataflowSpec, MovementSpec\n"
+        "from repro.core.notation import EnGNHardwareParams\n"
+        "def bad(g, hw):\n"
+        "    bits = np.asarray(g.K * g.N, dtype=np.float64)\n"  # no sigma
+        "    return bits, np.ones_like(bits)\n"
+        "registry.register(DataflowSpec(\n"
+        "    name='zz_bad', movements=(\n"
+        "        MovementSpec('only', 'L2-L1', bad, role='other'),),\n"
+        "    hw_factory=EnGNHardwareParams))\n")
+    r = subprocess.run(
+        [sys.executable, "-m", "repro.analysis", "--strict",
+         "--no-mutations"],
+        capture_output=True, text=True, cwd=REPO,
+        env=_cli_env(f"{tmp_path}:{REPO / 'src'}"))
+    assert r.returncode == 1, r.stdout + r.stderr
+    assert "zz_bad" in r.stdout + r.stderr
+
+
+def test_provenance_markers_present_once():
+    text = (REPO / "DESIGN.md").read_text()
+    assert text.count(PROVENANCE_BEGIN) == 1
+    assert text.count(PROVENANCE_END) == 1

@@ -528,3 +528,102 @@ def test_trace_scale_ten_million_edges_end_to_end(tmp_path):
     assert row["n_edges"] == 10_000_000
     assert row["drift_errors"] == []
     assert row["edges_per_sec"] > 1e6
+
+
+# ---------------------------------------------------------------------------
+# PR-8 satellite: float64-exactness at the 2^53 boundary.  The model
+# auditor (repro.analysis) proves the *closed forms* stay exactly
+# representable at the ROADMAP envelope; this pins the same property for
+# the trace engine's integer pipeline: multiplicity prefix sums and
+# schedule counts at 2^53-adjacent edge totals must match a Python-int
+# oracle exactly (int64 end to end, no float64 round-trip losses).
+# ---------------------------------------------------------------------------
+
+def _python_int_schedule_oracle(u_snd, u_rcv, mult, V, cap):
+    """Schedule counts re-derived with arbitrary-precision Python ints."""
+    n_tiles = -(-V // cap)
+    edge = [0] * n_tiles
+    remote = [0] * n_tiles
+    halo_sources = [set() for _ in range(n_tiles)]
+    for s, r, m in zip(u_snd, u_rcv, mult):
+        t = int(r) // cap
+        edge[t] += int(m)
+        if int(s) // cap != t:
+            remote[t] += int(m)
+            halo_sources[t].add(int(s))
+    return edge, remote, [len(h) for h in halo_sources]
+
+
+def _dense_pairs(V, seed):
+    """A deterministic sender-major unique-pair set over V vertices."""
+    rng = np.random.default_rng(seed)
+    keys = np.unique(rng.integers(0, V * V, size=4 * V))
+    return (keys // V).astype(np.int64), (keys % V).astype(np.int64)
+
+
+def test_schedule_oracle_convention_matches_engine():
+    """Validate the Python-int oracle's tile convention at small scale."""
+    V, cap = 96, 32
+    u_snd, u_rcv = _dense_pairs(V, seed=7)
+    mult = (1 + (u_snd + u_rcv) % 5).astype(np.int64)
+    prefix = np.zeros(mult.size + 1, dtype=np.int64)
+    np.cumsum(mult, out=prefix[1:])
+    trace = GraphTrace.from_factorization(V, u_snd, u_rcv, prefix)
+    sched = trace.schedule(cap)
+    edge, remote, halo = _python_int_schedule_oracle(
+        u_snd, u_rcv, mult, V, cap)
+    assert [int(x) for x in sched.edge_counts] == edge
+    assert [int(x) for x in sched.remote_edge_counts] == remote
+    assert [int(x) for x in sched.halo_counts] == halo
+
+
+@pytest.mark.parametrize("total", [2**53 - 1, 2**53 + 4097, 10**8 + 7],
+                         ids=["2p53-1", "2p53+4097", "1e8"])
+def test_schedule_counts_exact_at_2p53_boundary(total):
+    """2^53-adjacent multiplicity totals survive the int64 pipeline.
+
+    One unique pair carries nearly the whole edge multiplicity, so prefix
+    sums and per-tile totals land at or past 2^53 (where float64 spacing
+    is 2.0).  The int64 side — E, CSR row pointers, out-degrees — must
+    equal the Python-int oracle *exactly* at any scale; a weighted
+    float64 bincount anywhere in the multiplicity path shows up here as
+    an off-by-a-few (the pre-PR-8 behavior).  The float64-stored schedule
+    counts must be exact up to 2^53 and nearest-representable — one final
+    rounding, never accumulated error — beyond it.
+    """
+    V, cap = 96, 32
+    u_snd, u_rcv = _dense_pairs(V, seed=11)
+    U = u_snd.size
+    mult = np.ones(U, dtype=np.int64)
+    mult[U // 3] = total - (U - 1)  # a 2^53-scale hot pair
+    prefix = np.zeros(U + 1, dtype=np.int64)
+    np.cumsum(mult, out=prefix[1:])
+    assert prefix.dtype == np.int64 and int(prefix[-1]) == total
+
+    trace = GraphTrace.from_factorization(V, u_snd, u_rcv, prefix)
+    assert trace.n_edges == total  # no float64 narrowing of E
+    edge, remote, halo = _python_int_schedule_oracle(
+        u_snd, u_rcv, mult, V, cap)
+
+    # int64 pipeline: exact at any scale.
+    assert trace.row_ptr.dtype == np.int64
+    assert int(trace.row_ptr[-1]) == total
+    row_counts = [0] * V
+    out_deg = [0] * V
+    for s, r, m in zip(u_snd, u_rcv, mult):
+        row_counts[int(r)] += int(m)
+        out_deg[int(s)] += int(m)
+    assert [int(x) for x in np.diff(trace.row_ptr)] == row_counts
+    assert [int(x) for x in trace.out_degrees()] == out_deg
+
+    # float64-stored schedule counts: exact <= 2^53, one nearest-
+    # representable rounding beyond (never accumulated error).
+    sched = trace.schedule(cap)
+    assert list(sched.edge_counts) == [float(x) for x in edge]
+    assert list(sched.remote_edge_counts) == [float(x) for x in remote]
+    assert [int(x) for x in sched.halo_counts] == halo
+    if total <= 2**53:
+        assert [int(x) for x in sched.edge_counts] == edge
+        assert [int(x) for x in sched.remote_edge_counts] == remote
+        assert sched.cut_edges == sum(remote)
+    assert sched.halo_total == sum(halo)
