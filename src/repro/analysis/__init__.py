@@ -19,8 +19,9 @@ transcription errors and asserts the auditor catches every one.
 """
 
 from .audit import (DEFAULT_ENVELOPE, MovementAudit, SpecAudit,
-                    analysis_cache_info, audit_registry, audit_spec,
-                    clear_analysis_cache, render_provenance)
+                    analysis_cache_info, audit_composition_forms,
+                    audit_registry, audit_spec, clear_analysis_cache,
+                    render_provenance)
 from .lint import LintViolation, default_lint_roots, lint_paths, lint_source
 from .mutations import (Mutant, MutationOutcome, mutate_spec,
                         run_mutation_battery)
@@ -34,7 +35,8 @@ __all__ = [
     "SymbolicValue", "TraceContext", "TraceAbort", "UnitIssue",
     "OverflowRecord", "FLOAT64_EXACT_MAX", "traced_record", "trace_form",
     "MovementAudit", "SpecAudit", "audit_spec", "audit_registry",
-    "analysis_cache_info", "clear_analysis_cache", "render_provenance",
+    "audit_composition_forms", "analysis_cache_info",
+    "clear_analysis_cache", "render_provenance",
     "DEFAULT_ENVELOPE",
     "LintViolation", "lint_source", "lint_paths", "default_lint_roots",
     "Mutant", "MutationOutcome", "mutate_spec", "run_mutation_battery",

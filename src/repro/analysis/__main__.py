@@ -29,7 +29,8 @@ import json
 import sys
 from pathlib import Path
 
-from .audit import audit_registry, render_provenance
+from .audit import (audit_composition_forms, audit_registry,
+                    render_provenance)
 from .lint import lint_paths
 from .mutations import run_mutation_battery
 
@@ -99,6 +100,9 @@ def main(argv=None) -> int:
 
     envelope = _build_envelope(args)
     audits = audit_registry(envelope=envelope or None)
+    # The composition-layer closed forms (DESIGN.md §17) audit as a
+    # pseudo-dataflow so strict gating and provenance cover them too.
+    audits["composition"] = audit_composition_forms(envelope=envelope or None)
     table = render_provenance(audits)
 
     # --provenance: table-centric modes short-circuit the full report.

@@ -51,10 +51,12 @@ __all__ = [
     "SpecAudit",
     "audit_spec",
     "audit_registry",
+    "audit_composition_forms",
     "analysis_cache_info",
     "clear_analysis_cache",
     "render_provenance",
     "DEFAULT_ENVELOPE",
+    "COMPOSITION_AUDIT_POINT",
 ]
 
 #: The ROADMAP item-1 operating envelope the overflow audit defaults to —
@@ -225,6 +227,7 @@ def analysis_cache_info() -> dict:
 
 def clear_analysis_cache() -> None:
     _AUDIT_CACHE.clear()
+    _COMPOSITION_CACHE.clear()
     _CACHE_STATS["hits"] = _CACHE_STATS["misses"] = 0
 
 
@@ -362,6 +365,125 @@ def audit_registry(*, envelope: Optional[Mapping[str, tuple]] = None,
     return {name: audit_spec(registry.get(name), envelope=envelope,
                              use_cache=use_cache)
             for name in registry.names()}
+
+
+# -- composition-layer forms (DESIGN.md §17) --------------------------------
+
+#: (role, hierarchy) of each composition-layer term, matching what the
+#: array-path evaluations in :mod:`repro.core.compose` charge.
+_COMPOSITION_TERM_INFO = {
+    "relationalhalo": ("vertex_in", "L2-L1"),
+    "relationalhandoff": ("interphase", "L1-L1"),
+    "minibatchgather": ("vertex_in", "L2-L1"),
+}
+
+#: The §17 operating point the composition value pins are taken at: a
+#: 4-relation typed graph, 256-vertex tiles with 100 unique remote
+#: sources, 32 halo feature elements per vertex.
+COMPOSITION_AUDIT_POINT = {"R": 4, "H": 100.0, "K": 256.0, "W": 32.0}
+
+#: Forms whose provenance must carry the relation symbol ``graph.R`` —
+#: a typed-graph form that drops its R multiplicity is wrong even if its
+#: units still reduce (the §17 extension of the provenance contract).
+_REQUIRES_R_SYMBOL = ("relationalhalo", "relationalhandoff")
+
+_COMPOSITION_CACHE: dict[tuple, SpecAudit] = {}
+
+
+def audit_composition_forms(*, envelope: Optional[Mapping[str, tuple]] = None,
+                            use_cache: bool = True) -> SpecAudit:
+    """Audit the composition-layer closed forms like a pseudo-dataflow.
+
+    The relational / episode evaluations charge movement terms that no
+    registered :class:`MovementSpec` owns (exact halo reload, resident
+    hand-off, minibatch gather).  ``repro.core.compose.COMPOSITION_FORMS``
+    restates them over the declared
+    :class:`~repro.core.notation.RelationalScheduleParams` x
+    :class:`~repro.core.notation.CompositionHardwareParams` records; this
+    pass traces each exactly like a Table III/IV movement — units must
+    reduce to ``bits^1`` / ``bits^0``, the 2^53 interval propagates the
+    relation-count (R) multiplicity, and the relational forms must read
+    the ``graph.R`` symbol (dropping the multiplicity is a strict error,
+    not just a smaller number).  Returns a :class:`SpecAudit` named
+    ``"composition"`` so the CLI report, ``--strict`` gate, and
+    provenance table handle it uniformly.
+    """
+    key = _envelope_key(envelope)
+    if use_cache and key in _COMPOSITION_CACHE:
+        _CACHE_STATS["hits"] += 1
+        return _COMPOSITION_CACHE[key]
+    if use_cache:
+        _CACHE_STATS["misses"] += 1
+
+    from ..core.compose import COMPOSITION_FORMS
+    from ..core.notation import (CompositionHardwareParams,
+                                 RelationalScheduleParams)
+
+    base_graph = RelationalScheduleParams(**COMPOSITION_AUDIT_POINT)
+    base_hw = CompositionHardwareParams()
+    audits = []
+    used_symbols: set[str] = set()
+    for name, form in COMPOSITION_FORMS:
+        role, hierarchy = _COMPOSITION_TERM_INFO.get(name, ("other", "L2-L1"))
+        ctx = TraceContext(movement=f"composition.{name}")
+        tg = traced_record(base_graph, "graph", ctx, overrides=envelope)
+        th = traced_record(base_hw, "hw", ctx)
+        trace_error = None
+        bits_unit = iters_unit = "untraced"
+        symbols: tuple[str, ...] = ()
+        bits_bound = iters_bound = float("nan")
+        try:
+            bits, iters = trace_form(form, tg, th, ctx,
+                                     movement=f"composition.{name}")
+        except TraceAbort as e:
+            trace_error = str(e)
+        except Exception as e:
+            trace_error = (f"composition.{name}: tracer raised "
+                           f"{type(e).__name__}: {e}")
+        else:
+            bits_unit, iters_unit = str(bits.unit), str(iters.unit)
+            if not bits.unit.is_bits:
+                ctx.issue("data_bits", f"reduces to {bits.unit}, expected "
+                                       f"bits (a count x count product is "
+                                       f"not data movement)")
+            if not iters.unit.is_dimensionless:
+                ctx.issue("iterations", f"reduces to {iters.unit}, "
+                                        f"expected dimensionless")
+            symbols = tuple(sorted(bits.symbols | iters.symbols))
+            if name in _REQUIRES_R_SYMBOL and "graph.R" not in symbols:
+                ctx.issue("provenance",
+                          "relational form never reads graph.R — the "
+                          "relation multiplicity has been dropped")
+            bits_bound, iters_bound = bits.hi, iters.hi
+        try:
+            vb = float(np.asarray(form(base_graph, base_hw)[0]))
+            vi = float(np.asarray(form(base_graph, base_hw)[1]))
+        except Exception:
+            vb = vi = float("nan")
+        audits.append(MovementAudit(
+            movement=name, role=role, hierarchy=hierarchy,
+            bits_unit=bits_unit, iters_unit=iters_unit, symbols=symbols,
+            unit_issues=tuple(ctx.issues), waived=False, audit_note=None,
+            overflows=tuple(ctx.overflows),
+            minimum_calls=ctx.minimum_calls, trace_error=trace_error,
+            bits_bound=bits_bound, iters_bound=iters_bound,
+            value_bits=vb, value_iters=vi))
+        used_symbols.update(symbols)
+
+    used_hw = {s.split(".", 1)[1] for s in used_symbols
+               if s.startswith("hw.")}
+    used_graph = {s.split(".", 1)[1] for s in used_symbols
+                  if s.startswith("graph.")}
+    hw_fields = {f.name for f in dataclasses.fields(base_hw)}
+    graph_fields = {f.name for f in dataclasses.fields(base_graph)}
+    report = SpecAudit(
+        name="composition", movements=tuple(audits),
+        dead_hw=tuple(sorted(hw_fields - used_hw)), waived_dead_hw=(),
+        unused_graph=tuple(sorted(graph_fields - used_graph)),
+        golden_expected=None, golden_actual=None, envelope=key)
+    if use_cache:
+        _COMPOSITION_CACHE[key] = report
+    return report
 
 
 # -- provenance rendering ---------------------------------------------------

@@ -30,8 +30,10 @@ from dataclasses import dataclass
 __all__ = ["Unit", "BITS", "DIMENSIONLESS", "UNIT_TAGS", "unit_from_tag"]
 
 #: The recognized Table II unit tags (see notation.FieldUnit).
+#: ``relations`` is this repo's extension for the typed-graph relation
+#: count R (DESIGN.md §17) — a count, hence dimensionless in the algebra.
 UNIT_TAGS = ("bits", "bits/iter", "elements", "vertices", "edges", "PEs",
-             "dimensionless")
+             "relations", "dimensionless")
 
 
 @dataclass(frozen=True)

@@ -23,10 +23,11 @@ from typing import Any, Iterable, Mapping, Optional, Sequence
 import numpy as np
 
 from repro.core import registry
-from repro.core.compose import FullGraphParams, MultiLayerModel, TiledGraphModel
+from repro.core.compose import (FullGraphParams, MultiLayerModel,
+                                RelationalGraphModel, TiledGraphModel)
 from repro.core.notation import GraphTileParams
 from repro.core.terms import ModelOutput
-from repro.core.trace import resolve_trace_dataset
+from repro.core.trace import TypedGraphTrace, resolve_trace_dataset
 
 from .scenario import Scenario, TILE_GRAPH_FIELDS
 
@@ -197,16 +198,86 @@ def _group_hw(spec, scenarios: Sequence[Scenario]):
                          for k in keys})
 
 
-def _group_model(spec, scenarios: Sequence[Scenario], trace=None):
+def _stack_rel(values) -> np.ndarray:
+    """Stack relation-carrying leaves of a hetero group.
+
+    The RelationalGraphModel convention is "relation axis LAST": a
+    per-relation list stacks to ``(B, R)``; a scalar leaf stacks to
+    ``(B, 1)`` so its batch axis cannot collide with the relation axis.
+    Arity is uniform within a plan group (it is structural).
+    """
+    vals = list(values)
+    if vals and isinstance(vals[0], (tuple, list)):
+        return np.asarray(vals, dtype=np.float64)
+    return np.asarray(vals, dtype=np.float64)[:, None]
+
+
+def _resolve_group_trace(first: Scenario):
+    """Resolve the edge list behind a trace / hetero / minibatch group."""
+    if first.graph_kind == "hetero":
+        params = dict(first.graph["params"])
+        params["n_relations"] = first.graph["n_relations"]
+        trace = resolve_trace_dataset(first.graph["dataset"], params)
+        if not isinstance(trace, TypedGraphTrace):
+            raise TypeError(
+                f"hetero scenario dataset {first.graph['dataset']!r} "
+                f"resolved to {type(trace).__name__}, not a "
+                "TypedGraphTrace; register a typed dataset (e.g. "
+                "typed_power_law / typed_blocks / typed_cora) or use "
+                "kind='trace' for homogeneous edge lists")
+        if trace.n_relations != first.graph["n_relations"]:
+            raise ValueError(
+                f"dataset {first.graph['dataset']!r} produced "
+                f"{trace.n_relations} relations but the scenario declares "
+                f"n_relations={first.graph['n_relations']}")
+        return trace
+    return resolve_trace_dataset(first.graph["dataset"],
+                                 first.graph["params"])
+
+
+def _group_schedule(first: Scenario, trace):
+    """The measured episode schedule of a minibatch group (cached per
+    trace-backed CSR via minibatch_schedule's own parameter-keyed cache)."""
+    from repro.data.sampler import csr_from_trace, minibatch_schedule
+
+    g = getattr(trace, "_sampler_csr", None)
+    if g is None:
+        g = csr_from_trace(trace)
+        trace._sampler_csr = g
+    return minibatch_schedule(
+        g, batch_nodes=first.graph["batch_nodes"],
+        fanout=first.graph["fanout"], n_batches=first.graph["n_batches"],
+        seed=first.graph["seed"])
+
+
+def _group_model(spec, scenarios: Sequence[Scenario], trace=None,
+                 schedule=None):
     """The (possibly composed) model shared by one plan group.
 
     ``trace`` (resolved once per group) switches the tiled model onto the
     exact edge-list schedule; tile capacities stack along the capacity
     axis (DESIGN.md §13), so same-dataset scenarios differing only in
-    ``tile_vertices`` share this one evaluation.
+    ``tile_vertices`` share this one evaluation.  A
+    :class:`~repro.core.trace.TypedGraphTrace` (hetero group) builds ONE
+    :class:`~repro.core.compose.RelationalGraphModel` covering every
+    relation; ``schedule`` (minibatch group) pins the episode schedule.
     """
     comp = scenarios[0].composition
+    kind = scenarios[0].graph_kind
+    if kind == "hetero":
+        widths = None
+        if comp.widths is not None:
+            widths = tuple(
+                _stack_rel(s.composition.widths[i] for s in scenarios)
+                for i in range(len(comp.widths)))
+        return RelationalGraphModel(
+            spec,
+            tile_vertices=_stack(s.composition.tile_vertices
+                                 for s in scenarios),
+            trace=trace, widths=widths, residency=comp.residency)
     if comp is None:
+        if schedule is not None:
+            return TiledGraphModel(spec, schedule=schedule)
         return spec
     inner = spec
     if comp.widths is not None:
@@ -214,6 +285,8 @@ def _group_model(spec, scenarios: Sequence[Scenario], trace=None):
             _stack(s.composition.widths[i] for s in scenarios)
             for i in range(len(comp.widths)))
         inner = MultiLayerModel(spec, widths, residency=comp.residency)
+    if schedule is not None:
+        return TiledGraphModel(inner, schedule=schedule)
     if comp.tile_vertices is not None:
         if trace is not None:
             return TiledGraphModel(
@@ -229,18 +302,32 @@ def _group_model(spec, scenarios: Sequence[Scenario], trace=None):
     return inner
 
 
-def _group_graph(scenarios: Sequence[Scenario], trace=None):
+def _group_graph(scenarios: Sequence[Scenario], trace=None, schedule=None):
     kind = scenarios[0].graph_kind
     if kind == "tile":
         return GraphTileParams(**{
             f: _stack(s.graph[f] for s in scenarios)
             for f in TILE_GRAPH_FIELDS})
-    if kind == "trace":
+    if kind in ("trace", "hetero"):
         # V/E are properties of the resolved edge list (shared across the
-        # group: the dataset reference is part of the plan key).
+        # group: the dataset reference is part of the plan key).  Hetero
+        # N/T may be per-relation vectors; their arity is structural, so
+        # the stack is rectangular, with the relation axis kept LAST.
+        stack = _stack_rel if kind == "hetero" else _stack
         return FullGraphParams(
             V=float(trace.n_nodes),
             E=float(trace.n_edges),
+            N=stack(s.graph["N"] for s in scenarios),
+            T=stack(s.graph["T"] for s in scenarios),
+            high_degree_fraction=_stack(s.graph["high_degree_fraction"]
+                                        for s in scenarios),
+        )
+    if kind == "minibatch":
+        # E is the measured total of sampled episode edges — the explicit
+        # schedule is exact, so the declared graph must match it.
+        return FullGraphParams(
+            V=float(trace.n_nodes),
+            E=float(schedule.n_edges),
             N=_stack(s.graph["N"] for s in scenarios),
             T=_stack(s.graph["T"] for s in scenarios),
             high_degree_fraction=_stack(s.graph["high_degree_fraction"]
@@ -260,11 +347,13 @@ def _evaluate_group(scenarios: Sequence[Scenario]) -> ModelOutput:
     first = scenarios[0]
     spec = registry.get(first.dataflow)
     trace = None
-    if first.graph_kind == "trace":
-        trace = resolve_trace_dataset(first.graph["dataset"],
-                                      first.graph["params"])
-    model = _group_model(spec, scenarios, trace=trace)
-    graph = _group_graph(scenarios, trace=trace)
+    schedule = None
+    if first.graph_kind in ("trace", "hetero", "minibatch"):
+        trace = _resolve_group_trace(first)
+    if first.graph_kind == "minibatch":
+        schedule = _group_schedule(first, trace)
+    model = _group_model(spec, scenarios, trace=trace, schedule=schedule)
+    graph = _group_graph(scenarios, trace=trace, schedule=schedule)
     hw = _group_hw(spec, scenarios)
     # THE one broadcast closed-form call for this group.
     return model.evaluate(graph, hw)
@@ -401,6 +490,27 @@ def evaluate_scenarios(scenarios: Sequence[Scenario], *,
                              "n_nodes": int(tr.n_nodes),
                              "n_edges": int(tr.n_edges),
                              "edge_list_free": not tr.has_edge_list}
+        elif members[0].graph_kind == "hetero":
+            tr = _resolve_group_trace(members[0])
+            meta["trace"] = {
+                "dataset": members[0].graph["dataset"],
+                "n_nodes": int(tr.n_nodes),
+                "n_edges": int(tr.n_edges),
+                "n_relations": int(tr.n_relations),
+                "relation_edge_counts": [
+                    int(c) for c in tr.relation_edge_counts()],
+            }
+        elif members[0].graph_kind == "minibatch":
+            tr = _resolve_group_trace(members[0])
+            sched = _group_schedule(members[0], tr)
+            meta["minibatch"] = {
+                "dataset": members[0].graph["dataset"],
+                "n_nodes": int(tr.n_nodes),
+                "n_episodes": int(sched.n_tiles),
+                "batch_nodes": int(sched.capacity),
+                "sampled_edges": int(sched.n_edges),
+                "gathered_sources": int(sched.halo_total),
+            }
         for j, i in enumerate(indices):
             s = members[j]
             conf = None

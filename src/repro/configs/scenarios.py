@@ -117,6 +117,27 @@ def _gnn_scenarios(arch: ArchDef, shape: ShapeSpec, dataflows, Scenario,
                 workload=f"{arch.name}/{shape.name}")
             for df in dataflows
         ]
+    if graph_kind == "hetero":
+        # Typed-relation reading of the same shape (DESIGN.md §17): the
+        # shape's edge budget replays as an R-relation typed power-law
+        # graph at the same V/E, each relation carrying its own weight
+        # stack (RGCN-style).  n_relations comes from the arch config
+        # when it declares one (e.g. edge types), else defaults to 3.
+        R = int(getattr(cfg, "n_edge_types", 0) or 3)
+        return [
+            Scenario.hetero(
+                df, dataset="typed_power_law",
+                params={"n_nodes": float(V), "n_edges": float(E),
+                        "seed": 0.0},
+                n_relations=R,
+                N=widths[0], T=widths[-1],
+                tile_vertices=min(tile_vertices, max(V, 1.0)),
+                widths=widths, residency="spill",
+                high_degree_fraction=high_degree_fraction,
+                label=f"{arch.name}/{shape.name}@{df}/hetero",
+                workload=f"{arch.name}/{shape.name}")
+            for df in dataflows
+        ]
     return [
         Scenario.full_graph(
             df, V=V, E=E, N=widths[0], T=widths[-1],
@@ -165,19 +186,21 @@ def arch_scenarios(arch: ArchDef, *,
 
     ``graph_kind="trace"`` (GNN family only) swaps the uniform full-graph
     composition for §12 exact-schedule scenarios over the deterministic
-    trace dataset matching each shape.
+    trace dataset matching each shape; ``graph_kind="hetero"`` (also GNN
+    only) reads the shape as an R-relation typed graph at the same V/E
+    (§17), one RGCN-style weight stack per relation.
     """
     from repro.api.scenario import Scenario
     if arch.family not in _FAMILIES:
         raise ValueError(f"no scenario bridge for family {arch.family!r} "
                          f"(arch {arch.name!r})")
-    if graph_kind not in ("full", "trace"):
+    if graph_kind not in ("full", "trace", "hetero"):
         raise ValueError(f"unknown graph_kind {graph_kind!r}; "
-                         "expected 'full' or 'trace'")
-    if graph_kind == "trace" and arch.family != "gnn":
+                         "expected 'full', 'trace', or 'hetero'")
+    if graph_kind in ("trace", "hetero") and arch.family != "gnn":
         raise ValueError(
-            f"graph_kind='trace' needs a real edge list, which only the "
-            f"gnn family shapes carry (arch {arch.name!r} is "
+            f"graph_kind={graph_kind!r} needs a real edge list, which only "
+            f"the gnn family shapes carry (arch {arch.name!r} is "
             f"{arch.family!r}); lm/recsys tiles are synthetic-banded and "
             "stay on the closed-form schedule")
     if dataflows is None:

@@ -78,6 +78,20 @@ class MovementSpec:
         bits, iterations = self.form(graph, hw)
         return MovementTerm(self.name, self.hierarchy, bits, iterations)
 
+    def interior_at(self, layer: int, n_layers: int) -> bool:
+        """Whether this movement is an *interior* activation transfer.
+
+        In an ``n_layers``-deep composition, a ``vertex_out`` before the
+        last layer or a ``vertex_in`` after the first carries an
+        inter-layer activation — exactly the traffic a ``"resident"``
+        policy keeps on-array (DESIGN.md §7).  Both composition engines
+        (:class:`~repro.core.compose.MultiLayerModel` and the relational
+        model) key their residency handling on this single predicate so
+        they cannot drift apart.
+        """
+        return ((self.role == "vertex_out" and layer < n_layers - 1)
+                or (self.role == "vertex_in" and layer > 0))
+
 
 @dataclass(frozen=True)
 class DataflowSpec:

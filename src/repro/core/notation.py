@@ -29,6 +29,8 @@ ParamArray = Union[int, float, np.ndarray]
 __all__ = [
     "ParamArray",
     "GraphTileParams",
+    "RelationalScheduleParams",
+    "CompositionHardwareParams",
     "EnGNHardwareParams",
     "HyGCNHardwareParams",
     "TiledSpMMHardwareParams",
@@ -336,4 +338,69 @@ declare_units(AWBGCNHardwareParams, {
     "M": FieldUnit("PEs", doc="column-product PEs"),
     "eta": FieldUnit("dimensionless", doc="autotuned balance efficiency"),
     "rho": FieldUnit("dimensionless", doc="rerouted partial-result fraction"),
+})
+
+
+# ---------------------------------------------------------------------------
+# Composition-layer parameter records (DESIGN.md §17): the typed-graph /
+# minibatch closed forms of repro.core.compose.COMPOSITION_FORMS are traced
+# over these, so the relation axis is audited with the same unit algebra,
+# provenance tracking, and 2^53 interval envelope as the Table III/IV terms.
+# ---------------------------------------------------------------------------
+
+@dataclass(frozen=True)
+class RelationalScheduleParams:
+    """Per-tile schedule quantities of the typed / episode evaluations.
+
+    Attributes:
+      R: number of edge relations (types) in the typed graph; 1 for a
+         homogeneous sampled-minibatch episode.
+      H: unique remote (halo / gathered non-seed) source vertices of one
+         tile or episode — the exact deduplicated count the trace measures.
+      K: vertices resident in the tile (partition geometry, shared across
+         relations).
+      W: per-vertex feature elements moved per halo/hand-off vertex (the
+         summed interior widths, ``halo_feature_elems``).
+    """
+
+    R: ParamArray
+    H: ParamArray
+    K: ParamArray
+    W: ParamArray
+
+    def replace(self, **kw: ParamArray) -> "RelationalScheduleParams":
+        return dataclasses.replace(self, **kw)
+
+
+@dataclass(frozen=True)
+class CompositionHardwareParams:
+    """Architecture-independent hardware knobs of the composition terms.
+
+    Every registered dataflow shares these two Table II symbols; the
+    composition layer charges its halo / hand-off / gather terms with them
+    regardless of which inner dataflow runs the tile.
+    """
+
+    sigma: ParamArray = 4
+    B: ParamArray = 1000
+
+    def replace(self, **kw: ParamArray) -> "CompositionHardwareParams":
+        return dataclasses.replace(self, **kw)
+
+
+# Relation counts span the tuner's supported range; halo / vertex counts
+# share the ROADMAP item-1 vertex envelope (a tile's unique remote sources
+# are at most V); widths share the feature-element envelope.
+declare_units(RelationalScheduleParams, {
+    "R": FieldUnit("relations", 1, 64, "edge relations in the typed graph"),
+    "H": FieldUnit("vertices", 0, 1e7,
+                   "unique remote / gathered source vertices per tile"),
+    "K": FieldUnit("vertices", 1, 1e7, "vertices resident in the tile"),
+    "W": FieldUnit("elements", 1, 1024,
+                   "halo feature elements moved per vertex"),
+})
+
+declare_units(CompositionHardwareParams, {
+    "sigma": FieldUnit("bits", doc="precision of one feature element"),
+    "B": FieldUnit("bits/iter", doc="L2 memory bandwidth"),
 })

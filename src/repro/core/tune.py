@@ -307,7 +307,7 @@ class TunePoint:
     index: int
     dataflow: str
     tile_vertices: float
-    residency: str
+    residency: Any  # one policy name, or a per-relation tuple (§17)
     halo_dedup: float
     objective: float
     sram_bits: float
@@ -321,7 +321,9 @@ class TunePoint:
             "index": self.index,
             "dataflow": self.dataflow,
             "tile_vertices": self.tile_vertices,
-            "residency": self.residency,
+            "residency": (list(self.residency)
+                          if isinstance(self.residency, tuple)
+                          else self.residency),
             "halo_dedup": self.halo_dedup,
             "objective": self.objective,
             "sram_bits": self.sram_bits,
@@ -439,6 +441,14 @@ def tune_scenario(scenario) -> TuneResult:
         raise ValueError("tune_scenario needs a scenario with an "
                          "{'optimize': ...} block; plain scenarios go "
                          "through evaluate_scenarios directly")
+    if getattr(scenario, "graph_kind", None) == "minibatch":
+        # The scenario layer rejects this combination at construction;
+        # keep the engine-side check so a hand-built object fails the
+        # same way instead of deep in the search.
+        raise ValueError(
+            "minibatch scenarios have no searchable tiling: the sampling "
+            "episode (batch_nodes/fanout) fixes the schedule, so there is "
+            "no tile_vertices axis to optimize")
     # Lazy imports: this module stays import-light for the scenario layer,
     # and importing the planner at module level would be circular.
     from repro.api.planner import evaluate_scenarios
@@ -451,10 +461,14 @@ def tune_scenario(scenario) -> TuneResult:
     kind = scenario.graph_kind
     space = opt["space"]
 
-    if kind == "trace":
+    n_relations = 1
+    if kind in ("trace", "hetero"):
         from .trace import resolve_trace_dataset
-        trace = resolve_trace_dataset(scenario.graph["dataset"],
-                                      scenario.graph["params"])
+        params = dict(scenario.graph["params"])
+        if kind == "hetero":
+            n_relations = int(scenario.graph["n_relations"])
+            params["n_relations"] = n_relations
+        trace = resolve_trace_dataset(scenario.graph["dataset"], params)
         V = float(trace.n_nodes)
     else:
         V = float(scenario.graph["V"])
@@ -468,7 +482,25 @@ def tune_scenario(scenario) -> TuneResult:
     dataflows = tuple(dataflows)
     for name in dataflows:
         registry.get(name)  # unknown dataflow fails now, not mid-search
-    residencies = tuple(space.get("residency") or (comp.residency,))
+    res_axis = space.get("residency")
+    if res_axis is not None and kind == "hetero" and n_relations > 1:
+        # Per-relation residency search (§17): the policy axis expands to
+        # the cross-product of per-relation assignments.  Homogeneous
+        # tuples are kept as tuples; the planner's plan key treats the
+        # tuple arity structurally, so each assignment still lands in one
+        # broadcast group per (dataflow, residency).
+        expanded = len(res_axis) ** n_relations
+        if expanded > DEFAULT_MAX_EXHAUSTIVE:
+            raise ValueError(
+                f"per-relation residency search is "
+                f"{len(res_axis)}^{n_relations} = {expanded} assignments, "
+                f"above the {DEFAULT_MAX_EXHAUSTIVE}-point expansion cap; "
+                "pin composition.residency or reduce n_relations")
+        import itertools
+        residencies = tuple(itertools.product(res_axis,
+                                              repeat=n_relations))
+    else:
+        residencies = tuple(res_axis or (comp.residency,))
     halos = tuple(space.get("halo_dedup") or (comp.halo_dedup,))
     if "tile_vertices" in space:
         caps = tuple(space["tile_vertices"])
@@ -476,10 +508,10 @@ def tune_scenario(scenario) -> TuneResult:
         caps = tuple(float(math.ceil(V / nt)) for nt in space["n_tiles"])
     else:
         caps = (float(comp.tile_vertices),)
-    if kind == "trace":
+    if kind in ("trace", "hetero"):
         for c in caps:
             if c != int(c):
-                raise ValueError(f"trace tile capacities must be whole "
+                raise ValueError(f"{kind} tile capacities must be whole "
                                  f"numbers >= 1, got {c!r}")
     axes = {"dataflow": dataflows, "residency": residencies,
             "halo_dedup": halos, "tile_vertices": caps}
@@ -493,6 +525,29 @@ def tune_scenario(scenario) -> TuneResult:
     for name in dataflows:
         hw = registry.get(name).hw_factory()
         sigma[name] = float(scenario.hardware.get("sigma", hw.sigma))
+
+    def working_set(cap, sig, res, hd) -> float:
+        """Feasibility SRAM model for one candidate.
+
+        Homogeneous scenarios call :func:`tile_working_set_bits`
+        directly.  Hetero scenarios sum it over relations (§17): every
+        relation's weights are resident for the pass and each holds its
+        own per-relation activation slice, under its own residency
+        policy when ``res`` is a per-relation tuple.
+        """
+        if kind != "hetero":
+            return float(tile_working_set_bits(
+                cap, V=V, widths=widths, sigma=sig, residency=res,
+                halo_dedup=hd))
+        total = 0.0
+        for r in range(n_relations):
+            w_r = tuple(w[r] if isinstance(w, (tuple, list)) else w
+                        for w in widths)
+            res_r = res[r] if isinstance(res, (tuple, list)) else res
+            total += float(tile_working_set_bits(
+                cap, V=V, widths=w_r, sigma=sig, residency=res_r,
+                halo_dedup=hd))
+        return total
 
     # -- canonical enumeration (the oracle's order) ------------------------
     # A candidate is (dataflow, tile_vertices, residency, halo_dedup);
@@ -522,7 +577,9 @@ def tune_scenario(scenario) -> TuneResult:
                                     tile_vertices=cap, halo_dedup=hd),
             optimize=None, expect=None, conformance=False,
             label=(f"{scenario.label or 'tune'}"
-                   f"/{df}/tv{cap:g}/{res}/hd{hd:g}"))
+                   f"/{df}/tv{cap:g}/"
+                   f"{res if isinstance(res, str) else '+'.join(res)}/"
+                   f"hd{hd:g}"))
 
     evaluated: dict[tuple, TunePoint] = {}
     results: dict[tuple, Any] = {}
@@ -536,9 +593,7 @@ def tune_scenario(scenario) -> TuneResult:
         batch = evaluate_scenarios([candidate_scenario(c) for c in todo])
         n_groups += batch.n_evaluations
         for c, r in zip(todo, batch.results):
-            sram = float(tile_working_set_bits(
-                c[1], V=V, widths=widths, sigma=sigma[c[0]],
-                residency=c[2], halo_dedup=c[3]))
+            sram = working_set(c[1], sigma[c[0]], c[2], c[3])
             evaluated[c] = TunePoint(
                 index=cand_index(c), dataflow=c[0],
                 tile_vertices=float(c[1]), residency=c[2],

@@ -62,6 +62,7 @@ __all__ = [
     "sharded_power_law_factorization",
     "build_power_law_trace",
     "sharded_schedule_counts",
+    "typed_sharded_schedule_counts",
     "factorization_drift",
 ]
 
@@ -391,6 +392,31 @@ def sharded_schedule_counts(fact: tuple, K: int, n_tiles: int,
         halo += h
         remote_edges += r
     return halo, remote_edges
+
+
+def typed_sharded_schedule_counts(typed_trace, K: int, n_tiles: int,
+                                  n_shards: Optional[int] = None,
+                                  ) -> tuple[np.ndarray, np.ndarray]:
+    """Per-relation per-tile (halo, remote-edge) counts, sharded.
+
+    The typed factorization (DESIGN.md §17) keeps every relation's
+    unique-pair factorization as a contiguous slice of one shared sort,
+    so the sharded boundary-flag pass applies per relation unchanged:
+    relation ``r``'s slice is itself a sender-major factorization, and
+    :func:`sharded_schedule_counts` runs on it exactly as on a
+    homogeneous trace.  Returns ``(halo, remote_edges)`` as
+    ``(n_relations, n_tiles)`` int64 arrays — row ``r`` bit-identical to
+    the single-host counts of ``typed_trace.relation(r)`` for any shard
+    count (the typed extension of the drift-gate contract).
+    """
+    R = int(typed_trace.n_relations)
+    halo = np.zeros((R, n_tiles), dtype=np.int64)
+    remote = np.zeros((R, n_tiles), dtype=np.int64)
+    for r in range(R):
+        fact = typed_trace.relation(r)._pair_factorization()
+        halo[r], remote[r] = sharded_schedule_counts(
+            fact, K, n_tiles, n_shards=n_shards)
+    return halo, remote
 
 
 # ---------------------------------------------------------------------------

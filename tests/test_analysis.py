@@ -33,7 +33,8 @@ import pytest
 
 from repro.analysis import (BITS, DIMENSIONLESS, FLOAT64_EXACT_MAX,
                             SpecAudit, TraceAbort, TraceContext, Unit,
-                            analysis_cache_info, audit_registry, audit_spec,
+                            analysis_cache_info, audit_composition_forms,
+                            audit_registry, audit_spec,
                             clear_analysis_cache, lint_paths, lint_source,
                             mutate_spec, render_provenance,
                             run_mutation_battery, trace_form, traced_record,
@@ -438,7 +439,9 @@ def test_cli_strict_passes_and_writes_json(tmp_path):
     payload = json.loads(out.read_text())
     assert payload["schema"] == "repro.analysis/v1"
     assert payload["ok"] is True
-    assert set(payload["dataflows"]) == set(registry.names())
+    # §17: the composition pseudo-dataflow joins the strict gate alongside
+    # every registered dataflow.
+    assert set(payload["dataflows"]) == set(registry.names()) | {"composition"}
     assert payload["lint"]["violations"] == []
     mb = payload["mutation_battery"]
     assert mb["ran"] and mb["caught"] == mb["total"] > 0
@@ -472,7 +475,11 @@ def test_cli_provenance_check_current_and_tampered(tmp_path):
 def test_committed_appendix_matches_live_render():
     committed = extract_committed_provenance((REPO / "DESIGN.md").read_text())
     assert committed is not None, "DESIGN.md §16 appendix markers missing"
-    assert committed == render_provenance(audit_registry())
+    # Mirror the CLI: the §17 composition pseudo-dataflow renders into the
+    # appendix alongside every registered dataflow.
+    audits = audit_registry()
+    audits["composition"] = audit_composition_forms()
+    assert committed == render_provenance(audits)
 
 
 def test_cli_strict_fails_on_escaped_model_error(tmp_path):

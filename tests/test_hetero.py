@@ -1,0 +1,513 @@
+"""Typed-graph + sampled-minibatch battery (DESIGN.md §17).
+
+Load-bearing guarantees:
+
+* **Relational bit-identity** — on the block-diagonal ``typed_blocks``
+  fixture, :class:`~repro.core.compose.RelationalGraphModel` terms are
+  **bit-identical** (``np.array_equal``, never ``isclose``) to an R-loop
+  of homogeneous per-relation evaluations pairwise-combined along the
+  relation axis, for every registered dataflow x {single-layer, spill,
+  resident, per-relation widths, mixed per-relation residency};
+* **Typed schedule drift gate** — per-relation schedules carved from the
+  ONE shared typed factorization bit-match R independently constructed
+  single-relation ``GraphTrace`` builds, on both the single-host and
+  sharded engines;
+* **Minibatch oracle** — episode halo / gather counts from the
+  mark-array fast path match the independent ``np.unique``-family oracle
+  on a >= 1e5-edge graph;
+* **Planner grouping** — an R-relation scenario batch evaluates in
+  exactly ONE broadcast group per (dataflow, residency), regardless of R;
+* **Tuner** — the per-relation residency search equals a brute-force
+  cross-product replayed through the front door;
+* **Closed-form parity** — the auditable ``COMPOSITION_FORMS`` restate
+  exactly (integer-exact, order-free sums below 2^53) what the array
+  path charges for halo reload, resident hand-off, and episode gather;
+* **Sampler satellites** — the vectorized subgraph sampler is
+  bit-identical to the retained per-pick reference under a fixed rng,
+  ``build_csr`` rejects the int32 boundary, and ``SampledSubgraph``
+  invariants hold (exact {0,1} masks, seeds contained in nodes,
+  bijective local-id remap).
+"""
+
+import itertools
+
+import numpy as np
+import pytest
+
+from repro.api.planner import evaluate_scenarios
+from repro.api.scenario import Composition, Scenario
+from repro.core import registry
+from repro.core.compose import (COMPOSITION_FORMS, FullGraphParams,
+                                MultiLayerModel, RelationalGraphModel,
+                                TiledGraphModel, _pairwise_sum)
+from repro.core.notation import (CompositionHardwareParams,
+                                 RelationalScheduleParams)
+from repro.core.trace import (GraphTrace, TypedGraphTrace,
+                              resolve_trace_dataset)
+from repro.data import sampler as sampler_mod
+from repro.data.sampler import (build_csr, csr_from_trace,
+                                minibatch_oracle_counts, minibatch_schedule,
+                                sample_subgraph)
+
+TYPED_PARAMS = {"n_relations": 3, "n_nodes": 200, "n_edges": 900, "seed": 1}
+CAPS = (64.0, 100.0, 17.0)
+MB_PARAMS = {"n_nodes": 2000, "n_edges": 16000, "seed": 1}
+MB_KW = dict(batch_nodes=64, fanout=(10, 5), n_batches=8, seed=0)
+
+
+@pytest.fixture(scope="module")
+def typed_blocks() -> TypedGraphTrace:
+    tr = resolve_trace_dataset("typed_blocks", TYPED_PARAMS)
+    assert isinstance(tr, TypedGraphTrace)
+    return tr
+
+
+def _terms_by_key(output):
+    return {(t.name, t.hierarchy): (np.asarray(t.data_bits, np.float64),
+                                    np.asarray(t.iterations, np.float64))
+            for t in output.terms}
+
+
+def _rloop_combined(tr, make_inner, N=30.0, T=5.0):
+    """R-loop of homogeneous per-relation evaluations, combined exactly
+    the way the relational model reduces its relation axis (pairwise)."""
+    outs = []
+    for r in range(tr.n_relations):
+        rel = tr.relation(r)
+        full_r = FullGraphParams(V=tr.n_nodes, E=rel.n_edges, N=N, T=T)
+        m = TiledGraphModel(make_inner(r), tile_vertices=CAPS, trace=rel)
+        outs.append(_terms_by_key(m.evaluate(full_r)))
+    keys = list(dict.fromkeys(k for o in outs for k in o))
+    zeros = np.zeros(len(CAPS))
+    combined = {}
+    for k in keys:
+        cols = [o.get(k, (zeros, zeros)) for o in outs]
+        combined[k] = (_pairwise_sum(np.stack([c[0] for c in cols], axis=-1)),
+                       _pairwise_sum(np.stack([c[1] for c in cols], axis=-1)))
+    return combined
+
+
+def _assert_bit_identical(rel_model, combined, full):
+    got = _terms_by_key(rel_model.evaluate(full))
+    zeros = np.zeros(len(CAPS))
+    for k in dict.fromkeys(list(combined) + list(got)):
+        gb, gi = got.get(k, (zeros, zeros))
+        cb, ci = combined.get(k, (zeros, zeros))
+        assert np.array_equal(gb, cb), (k, gb, cb)
+        assert np.array_equal(gi, ci), (k, gi, ci)
+
+
+# ---------------------------------------------------------------------------
+# Relational model bit-identity (the tentpole acceptance gate)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("dataflow", registry.names())
+def test_relational_model_bit_matches_r_loop(typed_blocks, dataflow):
+    tr = typed_blocks
+    full = FullGraphParams(V=tr.n_nodes, E=tr.n_edges, N=30.0, T=5.0)
+    widths = (30.0, 16.0, 5.0)
+    cases = [
+        (dict(), lambda r: dataflow),
+        (dict(widths=widths),
+         lambda r: MultiLayerModel(dataflow, widths)),
+        (dict(widths=widths, residency="resident"),
+         lambda r: MultiLayerModel(dataflow, widths, residency="resident")),
+    ]
+    for kw, make_inner in cases:
+        m = RelationalGraphModel(dataflow, tile_vertices=CAPS,
+                                 trace=tr, **kw)
+        _assert_bit_identical(m, _rloop_combined(tr, make_inner), full)
+
+
+@pytest.mark.parametrize("dataflow", ("engn", "hygcn"))
+def test_relational_model_per_relation_widths_and_residency(typed_blocks,
+                                                            dataflow):
+    tr = typed_blocks
+    full = FullGraphParams(V=tr.n_nodes, E=tr.n_edges, N=30.0, T=5.0)
+    w0 = np.array([30.0, 20.0, 10.0])
+    w1 = np.array([16.0, 8.0, 12.0])
+    w2 = np.array([5.0, 5.0, 5.0])
+    m = RelationalGraphModel(dataflow, tile_vertices=CAPS, trace=tr,
+                             widths=(w0, w1, w2))
+    _assert_bit_identical(
+        m, _rloop_combined(tr, lambda r: MultiLayerModel(
+            dataflow, (w0[r], w1[r], w2[r]))), full)
+    res = ("resident", "spill", "resident")
+    m = RelationalGraphModel(dataflow, tile_vertices=CAPS, trace=tr,
+                             widths=(30.0, 16.0, 5.0), residency=res)
+    _assert_bit_identical(
+        m, _rloop_combined(tr, lambda r: MultiLayerModel(
+            dataflow, (30.0, 16.0, 5.0), residency=res[r])), full)
+
+
+def test_relational_model_scalar_capacity_keeps_batch_axis(typed_blocks):
+    m = RelationalGraphModel("engn", tile_vertices=64.0, trace=typed_blocks)
+    full = FullGraphParams(V=typed_blocks.n_nodes, E=typed_blocks.n_edges,
+                           N=30.0, T=5.0)
+    out = m.evaluate(full)
+    assert np.asarray(out.terms[0].data_bits).shape == (1,)
+
+
+# ---------------------------------------------------------------------------
+# Typed factorization / schedule drift gates
+# ---------------------------------------------------------------------------
+
+def test_typed_schedules_bit_match_independent_traces():
+    tr = resolve_trace_dataset("typed_power_law", TYPED_PARAMS)
+    for r in range(tr.n_relations):
+        mask = tr.rels == r
+        solo = GraphTrace(tr.senders[mask], tr.receivers[mask], tr.n_nodes)
+        rel = tr.relation(r)
+        assert rel.n_edges == solo.n_edges
+        for cap in (64, 37):
+            a = rel.schedule(cap)
+            b = solo.schedule(cap)
+            for f in ("vertex_counts", "edge_counts", "halo_counts",
+                      "remote_edge_counts"):
+                assert np.array_equal(getattr(a, f), getattr(b, f)), \
+                    (r, cap, f)
+
+
+def test_typed_sharded_counts_bit_match_single_host(typed_blocks):
+    from repro.distributed.trace_shard import typed_sharded_schedule_counts
+
+    tr = typed_blocks
+    cap = 64
+    n_tiles, K = tr.relation(0)._geometry(cap)
+    for n_shards in (1, 3, 7):
+        halo, remote = typed_sharded_schedule_counts(tr, K, n_tiles,
+                                                     n_shards=n_shards)
+        assert halo.shape == (tr.n_relations, n_tiles)
+        for r in range(tr.n_relations):
+            s = tr.relation(r).schedule(cap)
+            assert np.array_equal(halo[r], s.halo_counts.astype(np.int64))
+            assert np.array_equal(remote[r],
+                                  s.remote_edge_counts.astype(np.int64))
+
+
+def test_relation_edge_counts_partition_the_edge_list(typed_blocks):
+    counts = typed_blocks.relation_edge_counts()
+    assert counts.shape == (typed_blocks.n_relations,)
+    assert int(counts.sum()) == typed_blocks.n_edges
+    assert np.array_equal(counts, np.bincount(
+        typed_blocks.rels, minlength=typed_blocks.n_relations))
+
+
+# ---------------------------------------------------------------------------
+# Minibatch episodes: np.unique oracle at acceptance scale
+# ---------------------------------------------------------------------------
+
+def test_minibatch_counts_match_unique_oracle_100k_edges():
+    g = csr_from_trace(resolve_trace_dataset(
+        "power_law", {"n_nodes": 20000, "n_edges": 120000, "seed": 5}))
+    kw = dict(batch_nodes=256, fanout=(10, 5), n_batches=6, seed=2)
+    assert int(g.ptr[-1]) >= 1e5  # the sampled graph is acceptance-scale
+    sched = minibatch_schedule(g, **kw)
+    oracle = minibatch_oracle_counts(g, **kw)
+    assert sched.n_tiles == kw["n_batches"]
+    for f in ("edge_counts", "halo_counts", "remote_edge_counts"):
+        assert np.array_equal(getattr(sched, f), oracle[f]), f
+    assert np.all(sched.halo_counts <= sched.remote_edge_counts)
+    assert np.all(sched.vertex_counts == kw["batch_nodes"])
+    # Cached per graph instance: one sampling pass per parameter key.
+    assert minibatch_schedule(g, **kw) is sched
+
+
+def test_minibatch_scenario_charges_episode_schedule():
+    s = Scenario.minibatch("engn", dataset="power_law", params=MB_PARAMS,
+                           N=30.0, T=16.0, **MB_KW)
+    r = evaluate_scenarios([s]).results[0]
+    g = csr_from_trace(resolve_trace_dataset("power_law", MB_PARAMS))
+    sched = minibatch_schedule(g, **MB_KW)
+    assert r.meta["minibatch"]["sampled_edges"] == sched.n_edges
+    assert r.meta["minibatch"]["gathered_sources"] == sched.halo_total
+    assert np.isfinite(r.total_bits) and r.total_bits > 0
+
+
+# ---------------------------------------------------------------------------
+# Planner grouping + scenario round trips
+# ---------------------------------------------------------------------------
+
+def _hetero_scenario(df, tv, *, residency="spill", **kw):
+    return Scenario.hetero(
+        df, dataset="typed_blocks",
+        params={k: v for k, v in TYPED_PARAMS.items()
+                if k != "n_relations"},
+        n_relations=TYPED_PARAMS["n_relations"],
+        N=[30.0, 20.0, 10.0], T=16.0, tile_vertices=tv,
+        widths=[[30.0, 20.0, 10.0], 16.0, 5.0], residency=residency, **kw)
+
+
+def test_hetero_batch_one_group_per_dataflow_residency():
+    scen = [_hetero_scenario(df, tv, residency=res)
+            for df in ("engn", "hygcn")
+            for res in ("spill", ["resident", "spill", "resident"])
+            for tv in (64, 128)]
+    res = evaluate_scenarios(scen)
+    # 2 dataflows x 2 residency structures -> 4 broadcast evaluations for
+    # 8 scenarios; the capacity axis batches inside each group, and R
+    # never splits a group.
+    assert res.n_evaluations == 4
+    for g in res.groups:
+        assert len(g.indices) == 2
+    for r in res.results:
+        assert np.isfinite(r.total_bits) and r.total_bits > 0
+        assert r.meta["trace"]["n_relations"] == 3
+
+
+def test_hetero_group_matches_lone_evaluations():
+    scen = [_hetero_scenario("engn", tv) for tv in (64, 128, 17)]
+    batched = evaluate_scenarios(scen).results
+    for s, br in zip(scen, batched):
+        lone = evaluate_scenarios([s]).results[0]
+        assert lone.total_bits == br.total_bits
+        assert lone.total_iterations == br.total_iterations
+
+
+def test_hetero_and_minibatch_round_trip():
+    h = _hetero_scenario("hygcn", 64,
+                         residency=["resident", "spill", "resident"])
+    m = Scenario.minibatch("engn", dataset="power_law", params=MB_PARAMS,
+                           N=30.0, T=16.0, **MB_KW)
+    for s in (h, m):
+        s2 = Scenario.from_dict(s.to_dict())
+        assert s2 == s
+        assert s2.plan_key() == s.plan_key()
+
+
+def test_hetero_and_minibatch_validation_rejections():
+    with pytest.raises(ValueError, match="per-relation"):
+        Scenario.hetero("engn", dataset="typed_blocks", params={},
+                        n_relations=3, N=[1.0, 2.0], T=1.0,
+                        tile_vertices=64, widths=[4.0, 4.0])
+    with pytest.raises(ValueError, match="n_relations=3"):
+        Scenario.hetero("engn", dataset="typed_blocks", params={},
+                        n_relations=3, N=1.0, T=1.0, tile_vertices=64,
+                        widths=[4.0, 4.0],
+                        residency=["spill", "resident"])
+    with pytest.raises(ValueError, match="batch_nodes"):
+        Scenario.minibatch("engn", dataset="power_law", params={},
+                           batch_nodes=0, fanout=(5,), n_batches=2,
+                           N=1.0, T=1.0)
+    mb_graph = {"kind": "minibatch", "dataset": "power_law", "params": {},
+                "batch_nodes": 4, "fanout": [5], "n_batches": 2,
+                "seed": 0, "N": 1.0, "T": 1.0}
+    with pytest.raises(ValueError, match="seed batch"):
+        Scenario(dataflow="engn", graph=mb_graph,
+                 composition=Composition(widths=(4.0, 4.0),
+                                         tile_vertices=64.0))
+    with pytest.raises(ValueError, match="minibatch"):
+        Scenario(dataflow="engn", graph=mb_graph,
+                 optimize={"objective": "movement"})
+
+
+# ---------------------------------------------------------------------------
+# Tuner: per-relation residency search vs brute force
+# ---------------------------------------------------------------------------
+
+def test_tune_hetero_per_relation_residency_matches_brute_force():
+    from repro.core.tune import tune_scenario
+
+    params = {"n_nodes": 200, "n_edges": 900, "seed": 3}
+    base = Scenario.hetero(
+        "engn", dataset="typed_blocks", params=params,
+        n_relations=2, N=[30.0, 20.0], T=16.0, tile_vertices=64,
+        widths=[[30.0, 20.0], 16.0, 5.0],
+        optimize={"objective": "movement",
+                  "space": {"dataflow": ["engn", "hygcn"],
+                            "tile_vertices": [32, 64, 128],
+                            "residency": ["spill", "resident"]}})
+    res = tune_scenario(base)
+    assert res.method == "exhaustive"
+    assert res.n_candidates == 2 * (2 ** 2) * 3  # residency axis is 2^R
+
+    best = (np.inf, None)
+    for df in ("engn", "hygcn"):
+        for rr in itertools.product(("spill", "resident"), repeat=2):
+            for tv in (32, 64, 128):
+                s = Scenario.hetero(
+                    df, dataset="typed_blocks", params=params,
+                    n_relations=2, N=[30.0, 20.0], T=16.0,
+                    tile_vertices=tv,
+                    widths=[[30.0, 20.0], 16.0, 5.0], residency=list(rr))
+                r = evaluate_scenarios([s]).results[0]
+                if r.total_bits < best[0]:
+                    best = (r.total_bits, (df, float(tv), rr))
+    assert res.best.total_bits == best[0]
+    # Per-relation residency serializes as a JSON list, not a tuple.
+    d = res.best.to_dict()["residency"]
+    assert isinstance(d, (str, list))
+
+
+# ---------------------------------------------------------------------------
+# COMPOSITION_FORMS: value parity with the array-path evaluations
+# ---------------------------------------------------------------------------
+
+def test_relational_halo_form_matches_model(typed_blocks):
+    tr = typed_blocks
+    cap = 64
+    model = RelationalGraphModel("engn", tile_vertices=float(cap), trace=tr)
+    full = FullGraphParams(V=tr.n_nodes, E=tr.n_edges, N=30.0, T=5.0)
+    got = _terms_by_key(model.evaluate(full))
+    hw = CompositionHardwareParams()
+    form = dict(COMPOSITION_FORMS)["relationalhalo"]
+    bits = iters = 0.0
+    for r in range(tr.n_relations):
+        sched = tr.relation(r).schedule(cap)
+        g = RelationalScheduleParams(R=1, H=float(sched.halo_total),
+                                     K=float(sched.K), W=30.0)
+        b, i = form(g, hw)
+        bits += float(b)
+        iters += float(i)
+    gb, gi = got[("haloreload", "L2-L1")]
+    assert float(gb.reshape(-1)[0]) == bits
+    assert float(gi.reshape(-1)[0]) == iters
+    # The R axis of the form is pure multiplicity.
+    g4 = RelationalScheduleParams(R=4, H=100.0, K=256.0, W=32.0)
+    assert form(g4, hw)[0] == 4 * form(g4.replace(R=1), hw)[0]
+
+
+def test_relational_handoff_form_matches_model(typed_blocks):
+    tr = typed_blocks
+    cap = 64
+    widths = (30.0, 16.0, 5.0)
+    model = RelationalGraphModel("engn", tile_vertices=float(cap), trace=tr,
+                                 widths=widths, residency="resident")
+    full = FullGraphParams(V=tr.n_nodes, E=tr.n_edges, N=30.0, T=5.0)
+    got = _terms_by_key(model.evaluate(full))
+    hw = CompositionHardwareParams()
+    form = dict(COMPOSITION_FORMS)["relationalhandoff"]
+    # The vertex partition is shared across relations (it depends only on
+    # V and the capacity), so one form call per (layer boundary, tile)
+    # with R = n_relations covers all relations at once.
+    sched0 = tr.relation(0).schedule(cap)
+    bits = iters = 0.0
+    for l in range(len(widths) - 2):
+        for K_t in sched0.vertex_counts:
+            g = RelationalScheduleParams(R=tr.n_relations, H=0.0,
+                                         K=float(K_t),
+                                         W=float(widths[l + 1]))
+            b, i = form(g, hw)
+            bits += float(b)
+            iters += float(i)
+    gb, gi = got[("residenthandoff", "L1-L1")]
+    assert float(gb.reshape(-1)[0]) == bits
+    assert float(gi.reshape(-1)[0]) == iters
+
+
+def test_minibatch_gather_form_matches_episode_model():
+    g = csr_from_trace(resolve_trace_dataset("power_law", MB_PARAMS))
+    sched = minibatch_schedule(g, **MB_KW)
+    model = TiledGraphModel("engn", schedule=sched)
+    full = FullGraphParams(V=g.n_nodes, E=float(sched.n_edges),
+                           N=30.0, T=16.0)
+    got = _terms_by_key(model.evaluate(full))
+    hw = CompositionHardwareParams()
+    form = dict(COMPOSITION_FORMS)["minibatchgather"]
+    gp = RelationalScheduleParams(R=1, H=float(sched.halo_total),
+                                  K=float(MB_KW["batch_nodes"]), W=30.0)
+    b, i = form(gp, hw)
+    gb, gi = got[("haloreload", "L2-L1")]
+    assert float(np.asarray(gb).reshape(-1)[0]) == float(b)
+    assert float(np.asarray(gi).reshape(-1)[0]) == float(i)
+
+
+def test_composition_forms_audit_clean():
+    from repro.analysis.audit import audit_composition_forms
+
+    a = audit_composition_forms(use_cache=False)
+    assert a.name == "composition"
+    assert a.ok, a.strict_errors()
+    by_name = {m.movement: m for m in a.movements}
+    assert set(by_name) == {"relationalhalo", "relationalhandoff",
+                            "minibatchgather"}
+    for name in ("relationalhalo", "relationalhandoff"):
+        assert "graph.R" in by_name[name].symbols
+        assert by_name[name].bits_unit == "bits"
+
+
+# ---------------------------------------------------------------------------
+# Sampler satellites
+# ---------------------------------------------------------------------------
+
+def _csr_power_law(n_nodes=1500, n_edges=9000, seed=7):
+    return csr_from_trace(resolve_trace_dataset(
+        "power_law", {"n_nodes": n_nodes, "n_edges": n_edges,
+                      "seed": seed}))
+
+
+def test_sample_subgraph_bit_matches_reference():
+    g = _csr_power_law()
+    for trial in range(5):
+        seeds = np.random.default_rng(100 + trial).choice(
+            g.n_nodes, size=40, replace=False)
+        a = sample_subgraph(g, seeds, (8, 4),
+                            rng=np.random.default_rng(trial),
+                            n_pad=4096, e_pad=8192)
+        b = sampler_mod._sample_subgraph_reference(
+            g, seeds, (8, 4), rng=np.random.default_rng(trial),
+            n_pad=4096, e_pad=8192)
+        for f in ("node_ids", "senders", "receivers", "node_mask",
+                  "edge_mask", "seed_mask"):
+            assert np.array_equal(getattr(a, f), getattr(b, f)), (trial, f)
+        assert a.n_real_nodes == b.n_real_nodes
+        assert a.n_real_edges == b.n_real_edges
+
+
+def test_sampled_subgraph_invariants():
+    g = _csr_power_law()
+    seeds = np.random.default_rng(0).choice(g.n_nodes, size=64,
+                                            replace=False)
+    sub = sample_subgraph(g, seeds, (10, 5),
+                          rng=np.random.default_rng(1),
+                          n_pad=4096, e_pad=8192)
+    # Masks are exact {0, 1} and count the real entries.
+    for mask in (sub.node_mask, sub.edge_mask, sub.seed_mask):
+        assert set(np.unique(mask)).issubset({0.0, 1.0})
+    n_real, e_real = sub.n_real_nodes, sub.n_real_edges
+    assert int(sub.node_mask.sum()) == n_real
+    assert int(sub.edge_mask.sum()) == e_real
+    assert np.all(sub.node_mask[n_real:] == 0.0)
+    assert np.all(sub.edge_mask[e_real:] == 0.0)
+    # seed_mask is contained in node_mask; seeds lead the node list.
+    assert np.all(sub.seed_mask <= sub.node_mask)
+    assert int(sub.seed_mask.sum()) == seeds.size
+    assert np.array_equal(sub.node_ids[:seeds.size], seeds)
+    # Local-id remap is bijective on real entries: global ids unique,
+    # every real edge endpoint names a real local node.
+    real_ids = sub.node_ids[:n_real]
+    assert np.unique(real_ids).size == n_real
+    assert np.all((sub.senders[:e_real] >= 0)
+                  & (sub.senders[:e_real] < n_real))
+    assert np.all((sub.receivers[:e_real] >= 0)
+                  & (sub.receivers[:e_real] < n_real))
+    # Mapped back through node_ids, every sampled edge exists in the CSR.
+    snd_g = real_ids[sub.senders[:e_real]]
+    rcv_g = real_ids[sub.receivers[:e_real]]
+    for s, r in zip(snd_g[:64], rcv_g[:64]):
+        assert s in g.col[g.ptr[r]:g.ptr[r + 1]]
+
+
+def test_build_csr_rejects_int32_overflow_boundary():
+    snd = np.zeros(1, dtype=np.int64)
+    rcv = np.zeros(1, dtype=np.int64)
+    # 2^31 - 1 is the last representable id count; 2^31 must raise (and
+    # point at the int64 trace pipeline) instead of silently wrapping in
+    # the int32 narrowing cast.
+    with pytest.raises(ValueError, match="int32") as exc:
+        build_csr(snd, rcv, n_nodes=2**31)
+    assert "int64" in str(exc.value)
+    with pytest.raises(ValueError):
+        build_csr(snd, np.array([3], dtype=np.int64), n_nodes=3)
+
+
+def test_build_csr_small_graph_round_trip():
+    snd = np.array([0, 2, 2, 1])
+    rcv = np.array([1, 1, 0, 2])
+    g = build_csr(snd, rcv, n_nodes=3)
+    assert g.n_nodes == 3
+    assert g.col.dtype == np.int32
+    assert int(g.ptr[-1]) == 4
+    for r in range(3):
+        assert np.array_equal(np.sort(g.col[g.ptr[r]:g.ptr[r + 1]]),
+                              np.sort(snd[rcv == r]))
