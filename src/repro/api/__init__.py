@@ -11,11 +11,15 @@ One declarative, serializable query API for every
   scenario), results in input order with per-term breakdowns.
 * :mod:`~repro.api.templates` — the paper's figures as named scenario
   batches; the legacy ``figN_*`` sweep functions are thin clients.
+* :class:`~repro.api.serve.ServeEngine` — the §18 serving engine:
+  concurrent scenario-batch requests coalesced across callers inside a
+  micro-batching window, bit-identical to serial evaluation, with
+  per-request coalesce / cache metrics under ``meta["serve"]``.
 * ``python -m repro.api`` — the service-shaped CLI: evaluate scenario
   files (``--scenario batch.json``), named templates (``--template``),
   workload bridges (``--workload``), run the §15 design-space auto-tuner
-  (``--tune batch.json``), and emit ``BENCH_scenarios.json`` /
-  ``BENCH_tune.json``.
+  (``--tune batch.json``), serve a batch through the coalescing engine
+  (``--serve``), and emit ``BENCH_scenarios.json`` / ``BENCH_tune.json``.
 
 Workload configs join through :meth:`repro.configs.base.ArchDef.
 to_scenarios`, which translates each architecture's DESIGN.md §5
@@ -27,10 +31,12 @@ from repro.core.tune import (InfeasibleBudgetError, TunePoint, TuneResult,
                              tune_scenario)
 
 from .planner import (BatchResult, GroupResult, ScenarioResult,
-                      evaluate_groups, evaluate_scenario, evaluate_scenarios)
+                      coalesce_scenarios, evaluate_groups, evaluate_scenario,
+                      evaluate_scenarios)
 from .scenario import (Composition, FULL_GRAPH_FIELDS, Scenario,
                        TILE_GRAPH_FIELDS, TRACE_GRAPH_FIELDS, dump_scenarios,
                        load_scenarios, scenarios_to_dicts)
+from .serve import ServeEngine, ServeError, ServeResult
 from .templates import (TEMPLATES, TemplateBatch, template, template_names,
                         tile_scenarios_from_graph, trace_scenarios_from_graph)
 
@@ -49,6 +55,11 @@ __all__ = [
     "evaluate_scenario",
     "evaluate_scenarios",
     "evaluate_groups",
+    "coalesce_scenarios",
+    # §18 serving engine
+    "ServeEngine",
+    "ServeResult",
+    "ServeError",
     "TemplateBatch",
     "TEMPLATES",
     "template",

@@ -19,6 +19,15 @@ configuration, objective, SRAM working set, search statistics) instead
 of plain totals.  ``--json BENCH_tune.json`` emits the full search
 records including the movement-vs-SRAM Pareto frontier.
 
+``--serve`` routes the batch through the §18 serving engine instead of
+one direct planner call: every scenario becomes its own request,
+submitted concurrently from ``--serve-clients`` threads, coalesced
+across requests inside ``--serve-window``-second micro-batching
+windows.  Results (and the exit-status gates) are identical to the
+direct path — the serve engine is bit-exact by construction — with the
+engine's coalesce / cache metrics appended to the summary line and the
+JSON payload.
+
 Exit status is non-zero on schema errors (2: unknown optimize axis,
 negative budget, non-finite objective weight, infeasible budget, ...),
 on any ``expect`` golden-drift mismatch (1), and on any failed §10
@@ -50,9 +59,17 @@ def _print_listing() -> None:
         spec = registry.get(name)
         runnable = " [runnable analogue]" if spec.has_runnable else ""
         print(f"  {name:14} {len(spec.movements)} movement levels{runnable}")
-    print("\nscenario templates (--template NAME):")
+    # Kind tags let load generators (benchmarks/serve.py, external
+    # clients) assemble mixed serve workloads without trial and error:
+    # every template is evaluable, but its scenario kinds decide which
+    # caches (trace LRU, disk schedule store) a served batch exercises.
+    print("\nscenario templates (--template NAME) [scenario kinds]:")
     for name in template_names():
-        print(f"  {name}")
+        batch = template(name)
+        kinds = sorted({("tune" if s.optimize is not None else s.graph_kind)
+                        for s in batch.scenarios})
+        print(f"  {name:18} {len(batch.scenarios):3d} scenarios "
+              f"[{', '.join(kinds)}]")
     from repro.core.trace import trace_dataset_names
 
     print("\ntrace datasets ({'kind': 'trace', 'dataset': NAME, ...}):")
@@ -155,6 +172,15 @@ def main(argv: Optional[Sequence[str]] = None) -> int:
                          "(default: all registered)")
     ap.add_argument("--list", action="store_true",
                     help="list dataflows, templates, and workload bridges")
+    ap.add_argument("--serve", action="store_true",
+                    help="evaluate through the §18 coalescing serve engine "
+                         "(one concurrent request per scenario)")
+    ap.add_argument("--serve-window", type=float, default=0.002,
+                    metavar="SECONDS",
+                    help="micro-batching window for --serve (default 0.002)")
+    ap.add_argument("--serve-clients", type=int, default=8, metavar="N",
+                    help="concurrent submitter threads for --serve "
+                         "(default 8)")
     ap.add_argument("--json", nargs="?", const="BENCH_scenarios.json",
                     default=None, metavar="PATH",
                     help="write results JSON (default BENCH_scenarios.json)")
@@ -180,15 +206,28 @@ def main(argv: Optional[Sequence[str]] = None) -> int:
               "--workload, or --list)", file=sys.stderr)
         return 2
 
-    try:
-        res = evaluate_scenarios(scenarios)
-    except (ValueError, TypeError, KeyError) as exc:
-        print(f"error: {exc}", file=sys.stderr)
-        return 2
-
-    _print_rows(res)
-    print(f"# {len(res.results)} scenarios in {res.n_evaluations} broadcast "
-          f"evaluations ({len(res.evaluations_per_dataflow())} dataflows)")
+    serve_metrics = None
+    if args.serve:
+        try:
+            res, serve_metrics = _serve_batch(args, scenarios)
+        except (ValueError, TypeError, KeyError) as exc:
+            print(f"error: {exc}", file=sys.stderr)
+            return 2
+        _print_rows(res)
+        print(f"# {len(res.results)} scenarios served in "
+              f"{serve_metrics['windows']} windows / "
+              f"{serve_metrics['evaluations']} evaluations "
+              f"(coalesce rate {serve_metrics['coalesce_rate']:.3f})")
+    else:
+        try:
+            res = evaluate_scenarios(scenarios)
+        except (ValueError, TypeError, KeyError) as exc:
+            print(f"error: {exc}", file=sys.stderr)
+            return 2
+        _print_rows(res)
+        print(f"# {len(res.results)} scenarios in {res.n_evaluations} "
+              f"broadcast evaluations "
+              f"({len(res.evaluations_per_dataflow())} dataflows)")
 
     status = 0
     for scenario, fails in res.expect_failures():
@@ -205,11 +244,37 @@ def main(argv: Optional[Sequence[str]] = None) -> int:
     if args.json is not None:
         payload = res.to_dict()
         payload["status"] = "ok" if status == 0 else "failed"
+        if serve_metrics is not None:
+            payload["serve"] = serve_metrics
         with open(args.json, "w") as f:
             json.dump(payload, f, indent=2, sort_keys=True)
             f.write("\n")
         print(f"# wrote {args.json}")
     return status
+
+
+def _serve_batch(args: argparse.Namespace, scenarios: list[Scenario]
+                 ) -> tuple[BatchResult, dict]:
+    """Evaluate the batch through the §18 serve engine.
+
+    Each scenario becomes its own request, submitted concurrently from a
+    client thread pool, so same-plan scenarios actually coalesce across
+    requests the way independent callers would.  Results come back in
+    input order wrapped as a groupless :class:`BatchResult` — rows,
+    golden-drift gates, and conformance gates run unchanged.
+    """
+    from concurrent.futures import ThreadPoolExecutor
+
+    from .serve import ServeEngine
+
+    engine = ServeEngine(window_s=args.serve_window)
+    with engine:
+        with ThreadPoolExecutor(
+                max_workers=max(1, args.serve_clients)) as pool:
+            handles = [pool.submit(engine.submit, [s]) for s in scenarios]
+            served = [h.result() for h in handles]
+    results = tuple(sr.results[0] for sr in served)
+    return (BatchResult(results=results, groups=()), engine.metrics())
 
 
 def _tune_main(args: argparse.Namespace) -> int:

@@ -35,6 +35,7 @@ __all__ = [
     "ScenarioResult",
     "GroupResult",
     "BatchResult",
+    "coalesce_scenarios",
     "evaluate_scenario",
     "evaluate_scenarios",
     "evaluate_groups",
@@ -109,6 +110,9 @@ class ScenarioResult:
         tune = (self.meta or {}).get("tune")
         if tune is not None:
             out["tune"] = tune
+        serve = (self.meta or {}).get("serve")
+        if serve is not None:
+            out["serve"] = dict(serve)
         return out
 
 
@@ -176,6 +180,37 @@ class BatchResult:
             "evaluations_per_dataflow": self.evaluations_per_dataflow(),
             "results": [r.to_dict() for r in self.results],
         }
+
+
+def coalesce_scenarios(scenarios: Sequence[Scenario]
+                       ) -> tuple[list[Scenario], tuple[int, ...]]:
+    """Cross-request dedup: ``(distinct, backmap)`` over a flat batch.
+
+    ``distinct`` holds the unique scenarios in first-seen order and
+    ``backmap[i]`` is the position of ``scenarios[i]`` inside it, so a
+    caller can evaluate ``distinct`` once and scatter results back with
+    ``[results[j] for j in backmap]``.  Equality is full scenario
+    equality (:class:`Scenario` is frozen and hashable), which is finer
+    than :meth:`Scenario.plan_key` — two equal-plan-key scenarios with
+    different numeric leaves stay distinct here and coalesce into one
+    broadcast group later, inside :func:`evaluate_scenarios`.  This is
+    the serve engine's (DESIGN.md §18) cross-request collapse: N callers
+    asking the same question cost one evaluated scenario.
+    """
+    distinct: list[Scenario] = []
+    index: dict[Scenario, int] = {}
+    backmap: list[int] = []
+    for i, s in enumerate(scenarios):
+        if not isinstance(s, Scenario):
+            raise TypeError(f"scenarios[{i}] is {type(s).__name__}, "
+                            "expected Scenario")
+        j = index.get(s)
+        if j is None:
+            j = len(distinct)
+            index[s] = j
+            distinct.append(s)
+        backmap.append(j)
+    return distinct, tuple(backmap)
 
 
 def _stack(values: Iterable[float]) -> np.ndarray:

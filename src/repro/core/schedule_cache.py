@@ -47,6 +47,7 @@ import json
 import os
 import shutil
 import tempfile
+import threading
 from pathlib import Path
 from typing import Any, Mapping, Optional
 
@@ -61,6 +62,8 @@ __all__ = [
     "store_graph",
     "load_schedule",
     "store_schedule",
+    "cache_stats",
+    "reset_cache_stats",
 ]
 
 #: Bump when the on-disk layout of either artifact kind changes.  v2:
@@ -75,6 +78,80 @@ _DISABLED = {"", "0", "off", "none", "disabled"}
 #: Graph payload arrays that may appear as ``<name>.npy`` parts.
 _GRAPH_ARRAYS = ("senders", "receivers", "csr_senders", "row_ptr",
                  "fact_u_snd", "fact_u_rcv", "fact_mult_prefix")
+
+#: Process-wide hit/miss/store counters for the disk cache, bumped only
+#: when caching is enabled (a disabled cache is not a miss).  The serve
+#: engine (DESIGN.md §18) reads deltas of these per micro-batch window;
+#: the lock makes the read-modify-write cycles exact under concurrency.
+_CACHE_COUNTERS = {
+    "graph_hits": 0,
+    "graph_misses": 0,
+    "graph_stores": 0,
+    "schedule_hits": 0,
+    "schedule_misses": 0,
+    "schedule_stores": 0,
+    "store_races": 0,   # benign lost store_graph renames (see store_graph)
+}
+_COUNTER_LOCK = threading.Lock()
+
+
+def _count(name: str) -> None:
+    with _COUNTER_LOCK:
+        _CACHE_COUNTERS[name] += 1
+
+
+def reset_cache_stats() -> None:
+    """Zero the process-wide disk-cache counters (see :func:`cache_stats`)."""
+    with _COUNTER_LOCK:
+        for key in _CACHE_COUNTERS:
+            _CACHE_COUNTERS[key] = 0
+
+
+def cache_stats() -> dict:
+    """Disk-cache observability: process counters plus an on-disk census.
+
+    Returns ``{"enabled", "root", "counters", "entries", "bytes"}`` where
+    ``entries`` counts ``*.graph`` directories and schedule ``*.npz``
+    files currently under :func:`cache_root` and ``bytes`` sums their
+    sizes.  The walk is **eviction-safe**: entries deleted concurrently
+    (another process pruning the cache, a racing ``_drop_graph_dir``)
+    are simply skipped, never an error — the census is a snapshot, not
+    an invariant.
+    """
+    with _COUNTER_LOCK:
+        counters = dict(_CACHE_COUNTERS)
+    root = cache_root()
+    out = {"enabled": root is not None,
+           "root": str(root) if root is not None else None,
+           "counters": counters,
+           "entries": {"graphs": 0, "schedules": 0},
+           "bytes": 0}
+    if root is None or not root.is_dir():
+        return out
+    graphs = schedules = total = 0
+    try:
+        shards = list(root.iterdir())
+    except OSError:
+        return out
+    for shard in shards:
+        try:
+            children = list(shard.iterdir()) if shard.is_dir() else []
+        except OSError:
+            continue  # shard pruned mid-walk
+        for entry in children:
+            try:
+                if entry.name.endswith(".graph") and entry.is_dir():
+                    graphs += 1
+                    for part in entry.iterdir():
+                        total += part.stat().st_size
+                elif entry.suffix == ".npz" and entry.is_file():
+                    schedules += 1
+                    total += entry.stat().st_size
+            except OSError:
+                continue  # entry evicted mid-walk
+    out["entries"] = {"graphs": graphs, "schedules": schedules}
+    out["bytes"] = int(total)
+    return out
 
 
 def cache_root() -> Optional[Path]:
@@ -190,7 +267,10 @@ def load_graph(key: str) -> Optional[dict]:
     multiplicity prefix is re-widened by its consumer).
     """
     path = _graph_dir(key)
-    if path is None or not path.is_dir():
+    if path is None:
+        return None
+    if not path.is_dir():
+        _count("graph_misses")
         return None
     try:
         meta = json.loads((path / "meta.json").read_text())
@@ -207,11 +287,13 @@ def load_graph(key: str) -> Optional[dict]:
             or ("senders" in out and "receivers" in out))
         if not complete:
             raise ValueError(f"incomplete graph entry: {sorted(out)}")
+        _count("graph_hits")
         return out
     except (OSError, ValueError, KeyError):
         # Torn writes can't happen (the rename is atomic), so anything
         # unreadable here is foreign or damaged: drop it -> miss.
         _drop_graph_dir(path)
+        _count("graph_misses")
         return None
 
 
@@ -251,13 +333,28 @@ def store_graph(key: str, *, n_nodes: int, n_edges: int, row_ptr,
                 # Concurrent writer won the rename race; its bytes are
                 # identical (content-addressed), keep them.
                 _drop_graph_dir(tmp)
+                _count("store_races")
             else:
-                os.replace(tmp, path)
+                try:
+                    os.replace(tmp, path)
+                except OSError:
+                    # exists() -> replace() is a TOCTOU window: a racing
+                    # writer can land the entry between the check and the
+                    # rename, and os.replace onto a non-empty directory
+                    # raises ENOTEMPTY.  Content-addressing makes the
+                    # loser's bytes identical, so losing the race is a
+                    # benign no-op — but only when the winner's entry is
+                    # actually there; anything else is a real failure.
+                    _drop_graph_dir(tmp)
+                    if not path.exists():
+                        raise
+                    _count("store_races")
         except BaseException:
             _drop_graph_dir(tmp)
             raise
     except OSError:
         return False
+    _count("graph_stores")
     return True
 
 
@@ -268,14 +365,20 @@ _SCHEDULE_FIELDS = ("vertex_counts", "edge_counts", "halo_counts",
 
 def load_schedule(key: str) -> Optional[dict]:
     """Stored per-tile count arrays (float64) plus n_tiles/capacity/K."""
-    d = _load_npz(_schedule_path(key))
+    path = _schedule_path(key)
+    if path is None:
+        return None
+    d = _load_npz(path)
     if d is None or any(f not in d for f in _SCHEDULE_FIELDS):
+        _count("schedule_misses")
         return None
     out = {f: d[f].astype(np.float64, copy=False) for f in _SCHEDULE_FIELDS}
     for scalar in ("n_tiles", "capacity", "K"):
         if scalar not in d:
+            _count("schedule_misses")
             return None
         out[scalar] = int(d[scalar])
+    _count("schedule_hits")
     return out
 
 
@@ -299,4 +402,5 @@ def store_schedule(key: str, *, n_tiles: int, capacity: int, K: int,
         )
     except OSError:
         return False
+    _count("schedule_stores")
     return True

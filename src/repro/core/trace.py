@@ -51,6 +51,7 @@ from __future__ import annotations
 
 import functools
 import json
+import threading
 from collections import OrderedDict
 from dataclasses import dataclass, field
 from typing import Any, Callable, Mapping, Optional, Sequence
@@ -92,15 +93,29 @@ _TRACE_STATS = {
     "trace_builds": 0,       # dataset builder invocations (cold resolves)
 }
 
+#: Guards ``_TRACE_STATS`` read-modify-write cycles.  The serve engine
+#: (DESIGN.md §18) hammers the counters from many request threads; an
+#: unguarded ``+=`` loses increments under the GIL's bytecode-boundary
+#: preemption.
+_STATS_LOCK = threading.Lock()
+
+#: Guards the process-wide resolved-trace LRU (``_TRACE_CACHE``), its
+#: byte budget, and the dataset registry.  Reentrant because a cold
+#: ``resolve_trace_dataset`` holds it across the builder call, and the
+#: builder may consult registry metadata.
+_CACHE_LOCK = threading.RLock()
+
 
 def _bump_stat(name: str, n: int = 1) -> None:
-    _TRACE_STATS[name] += n
+    with _STATS_LOCK:
+        _TRACE_STATS[name] += n
 
 
 def reset_trace_stats() -> None:
     """Zero the process-wide trace work counters (see trace_cache_info)."""
-    for key in _TRACE_STATS:
-        _TRACE_STATS[key] = 0
+    with _STATS_LOCK:
+        for key in _TRACE_STATS:
+            _TRACE_STATS[key] = 0
 
 
 def _f64(x) -> np.ndarray:
@@ -302,6 +317,8 @@ class GraphTrace:
         self._fact_source: Optional[tuple] = None
         self._schedules: "OrderedDict[int, TraceSchedule]" = OrderedDict()
         self._disk_identity: Optional[tuple[str, str, str]] = None
+        # Reentrant: schedule() holds it across _pair_factorization().
+        self._lock = threading.RLock()
 
     # -- construction ------------------------------------------------------
     @classmethod
@@ -370,6 +387,7 @@ class GraphTrace:
         obj._fact_source = None
         obj._schedules = OrderedDict()
         obj._disk_identity = None
+        obj._lock = threading.RLock()
         return obj
 
     @classmethod
@@ -406,6 +424,7 @@ class GraphTrace:
                                 d["fact_mult_prefix"])
         obj._schedules = OrderedDict()
         obj._disk_identity = None
+        obj._lock = threading.RLock()
         return obj
 
     # -- basic measures ----------------------------------------------------
@@ -430,6 +449,10 @@ class GraphTrace:
         the unique pairs re-sorted receiver-major (same result: within a
         (receiver, sender) run the expansion is order-free).
         """
+        with self._lock:
+            return self._csr_senders_locked()
+
+    def _csr_senders_locked(self) -> np.ndarray:
         if self._csr_senders is None:
             V = self.n_nodes
             E = self._n_edges
@@ -464,9 +487,12 @@ class GraphTrace:
              + self.row_ptr.nbytes)
         if self._csr_senders is not None:
             n += self._csr_senders.nbytes
-        if self._fact is not None:
-            n += sum(a.nbytes for a in self._fact)
-        for s in self._schedules.values():
+        fact = self._fact
+        if fact is not None:
+            n += sum(a.nbytes for a in fact)
+        # Snapshot: the budget evictor reads concurrently with schedule
+        # inserts on other threads (an estimate either way).
+        for s in list(self._schedules.values()):
             n += (s.vertex_counts.nbytes + s.edge_counts.nbytes
                   + s.halo_counts.nbytes + s.remote_edge_counts.nbytes)
             if s._ranked_cache is not None:
@@ -507,6 +533,11 @@ class GraphTrace:
         argsort indirection — performed once and reused by every
         capacity, engine, and cache-hit query.
         """
+        with self._lock:
+            return self._pair_factorization_locked()
+
+    def _pair_factorization_locked(self) -> tuple[np.ndarray, np.ndarray,
+                                                  np.ndarray, np.ndarray]:
         if self._fact is None:
             V = self.n_nodes
             E = self.n_edges
@@ -674,7 +705,8 @@ class GraphTrace:
 
     def clear_schedules(self) -> None:
         """Drop the per-trace schedule LRU (memory reclaim)."""
-        self._schedules.clear()
+        with self._lock:
+            self._schedules.clear()
 
     def _schedule_from_disk(self, cap: int) -> Optional[TraceSchedule]:
         if self._disk_identity is None:
@@ -721,16 +753,20 @@ class GraphTrace:
         if engine not in _ENGINES:
             raise ValueError(f"unknown trace engine {engine!r}; "
                              f"expected one of {_ENGINES}")
-        sched = self._cached_schedule(cap)
-        if sched is None:
-            if engine == "jax":
-                sched = self._compute_schedules_jax([cap])[0]
-            elif engine == "sharded":
-                sched = self._compute_schedules_sharded([cap])[0]
-            else:
-                sched = self._compute_schedule(cap)
-            self._remember_schedule(cap, sched)
-        return sched
+        # Held across the compute so concurrent callers of the same
+        # capacity see exactly one schedule_computes bump (the §18 serve
+        # metrics count on it) instead of racing duplicate passes.
+        with self._lock:
+            sched = self._cached_schedule(cap)
+            if sched is None:
+                if engine == "jax":
+                    sched = self._compute_schedules_jax([cap])[0]
+                elif engine == "sharded":
+                    sched = self._compute_schedules_sharded([cap])[0]
+                else:
+                    sched = self._compute_schedule(cap)
+                self._remember_schedule(cap, sched)
+            return sched
 
     def schedules(self, tile_vertices: Sequence, *,
                   engine: str = "numpy") -> tuple[TraceSchedule, ...]:
@@ -750,22 +786,23 @@ class GraphTrace:
         # while later capacities compute).
         found: dict[int, TraceSchedule] = {}
         missing = []
-        for cap in dict.fromkeys(caps):
-            sched = self._cached_schedule(cap)
-            if sched is None:
-                missing.append(cap)
-            else:
-                found[cap] = sched
-        if missing:
-            if engine == "jax":
-                computed = self._compute_schedules_jax(missing)
-            elif engine == "sharded":
-                computed = self._compute_schedules_sharded(missing)
-            else:
-                computed = [self._compute_schedule(c) for c in missing]
-            for cap, sched in zip(missing, computed):
-                self._remember_schedule(cap, sched)
-                found[cap] = sched
+        with self._lock:
+            for cap in dict.fromkeys(caps):
+                sched = self._cached_schedule(cap)
+                if sched is None:
+                    missing.append(cap)
+                else:
+                    found[cap] = sched
+            if missing:
+                if engine == "jax":
+                    computed = self._compute_schedules_jax(missing)
+                elif engine == "sharded":
+                    computed = self._compute_schedules_sharded(missing)
+                else:
+                    computed = [self._compute_schedule(c) for c in missing]
+                for cap, sched in zip(missing, computed):
+                    self._remember_schedule(cap, sched)
+                    found[cap] = sched
         return tuple(found[c] for c in caps)
 
     def _compute_schedules_jax(self, caps: Sequence[int]) -> list[TraceSchedule]:
@@ -917,6 +954,8 @@ class TypedGraphTrace:
         self._n_edges = int(snd.size)
         self._fact: Optional[tuple] = None
         self._relation_traces: dict[int, GraphTrace] = {}
+        # Reentrant: relation() holds it across _typed_factorization().
+        self._lock = threading.RLock()
 
     # -- basic measures ----------------------------------------------------
     @property
@@ -928,15 +967,16 @@ class TypedGraphTrace:
         """In-memory footprint (edge arrays, shared factorization, and the
         per-relation traces carved out of it) — the trace-cache unit."""
         n = self.senders.nbytes + self.receivers.nbytes + self.rels.nbytes
-        if self._fact is not None:
-            n += sum(a.nbytes for a in self._fact)
-        for t in self._relation_traces.values():
+        fact = self._fact
+        if fact is not None:
+            n += sum(a.nbytes for a in fact)
+        for t in list(self._relation_traces.values()):
             n += t.nbytes
         return int(n)
 
     def clear_schedules(self) -> None:
         """Drop every per-relation schedule LRU (memory reclaim)."""
-        for t in self._relation_traces.values():
+        for t in list(self._relation_traces.values()):
             t.clear_schedules()
 
     def relation_edge_counts(self) -> np.ndarray:
@@ -956,6 +996,10 @@ class TypedGraphTrace:
         (length ``U+1``), and ``rel_ptr`` (length ``R+1``) delimiting
         each relation's contiguous triple range.
         """
+        with self._lock:
+            return self._typed_factorization_locked()
+
+    def _typed_factorization_locked(self):
         if self._fact is None:
             V = self.n_nodes
             R = self.n_relations
@@ -1024,15 +1068,16 @@ class TypedGraphTrace:
         if not 0 <= r < self.n_relations:
             raise ValueError(f"relation must lie in [0, {self.n_relations}), "
                              f"got {r}")
-        trace = self._relation_traces.get(r)
-        if trace is None:
-            _, u_snd, u_rcv, mp, rel_ptr = self._typed_factorization()
-            lo, hi = int(rel_ptr[r]), int(rel_ptr[r + 1])
-            local_prefix = mp[lo:hi + 1] - mp[lo]
-            trace = GraphTrace.from_factorization(
-                self.n_nodes, u_snd[lo:hi], u_rcv[lo:hi], local_prefix)
-            self._relation_traces[r] = trace
-        return trace
+        with self._lock:
+            trace = self._relation_traces.get(r)
+            if trace is None:
+                _, u_snd, u_rcv, mp, rel_ptr = self._typed_factorization()
+                lo, hi = int(rel_ptr[r]), int(rel_ptr[r + 1])
+                local_prefix = mp[lo:hi + 1] - mp[lo]
+                trace = GraphTrace.from_factorization(
+                    self.n_nodes, u_snd[lo:hi], u_rcv[lo:hi], local_prefix)
+                self._relation_traces[r] = trace
+            return trace
 
     def relation_traces(self) -> tuple[GraphTrace, ...]:
         """All per-relation traces, in relation order (one shared sort)."""
@@ -1077,18 +1122,20 @@ def register_trace_dataset(name: str, builder: Callable[..., GraphTrace], *,
     """
     if not name or not isinstance(name, str):
         raise ValueError(f"dataset name must be a non-empty string, got {name!r}")
-    if name in _TRACE_DATASETS and not overwrite:
-        raise ValueError(f"trace dataset {name!r} already registered "
-                         "(pass overwrite=True to replace)")
-    _TRACE_DATASETS[name] = (builder, cache_token)
-    # Replacing a builder must invalidate any traces resolved under the
-    # old one, or resolve_trace_dataset would keep serving stale graphs.
-    for key in [k for k in _TRACE_CACHE if k[0] == name]:
-        del _TRACE_CACHE[key]
+    with _CACHE_LOCK:
+        if name in _TRACE_DATASETS and not overwrite:
+            raise ValueError(f"trace dataset {name!r} already registered "
+                             "(pass overwrite=True to replace)")
+        _TRACE_DATASETS[name] = (builder, cache_token)
+        # Replacing a builder must invalidate any traces resolved under the
+        # old one, or resolve_trace_dataset would keep serving stale graphs.
+        for key in [k for k in _TRACE_CACHE if k[0] == name]:
+            del _TRACE_CACHE[key]
 
 
 def trace_dataset_names() -> tuple[str, ...]:
-    return tuple(sorted(_TRACE_DATASETS))
+    with _CACHE_LOCK:
+        return tuple(sorted(_TRACE_DATASETS))
 
 
 def _canonical_params(params: Mapping[str, Any]) -> str:
@@ -1150,8 +1197,9 @@ def set_trace_cache_budget(n_bytes: int) -> None:
     if n_bytes < 0:
         raise ValueError(f"trace cache budget must be >= 0 bytes, "
                          f"got {n_bytes!r}")
-    _TRACE_CACHE_BUDGET_BYTES = n_bytes
-    _evict_to_budget()
+    with _CACHE_LOCK:
+        _TRACE_CACHE_BUDGET_BYTES = n_bytes
+        _evict_to_budget()
 
 
 def trace_cache_info() -> dict:
@@ -1159,17 +1207,34 @@ def trace_cache_info() -> dict:
     plus the process-wide work counters (``stats``: factorizations,
     schedule computes/hits, builder invocations — see
     :func:`reset_trace_stats`)."""
-    return {"entries": len(_TRACE_CACHE),
-            "bytes": int(sum(t.nbytes for t in _TRACE_CACHE.values())),
-            "budget_bytes": int(_TRACE_CACHE_BUDGET_BYTES),
-            "stats": dict(_TRACE_STATS)}
+    with _CACHE_LOCK:
+        entries = len(_TRACE_CACHE)
+        nbytes = int(sum(t.nbytes for t in _TRACE_CACHE.values()))
+        budget = int(_TRACE_CACHE_BUDGET_BYTES)
+    with _STATS_LOCK:
+        stats = dict(_TRACE_STATS)
+    return {"entries": entries, "bytes": nbytes,
+            "budget_bytes": budget, "stats": stats}
 
 
 def resolve_trace_dataset(name: str,
                           params: Optional[Mapping[str, Any]] = None,
                           ) -> GraphTrace:
-    """Build (or fetch from the in-process / on-disk cache) a dataset."""
+    """Build (or fetch from the in-process / on-disk cache) a dataset.
+
+    Thread-safe: the whole resolve (LRU probe, disk-cache load, builder
+    call, insert) holds the process-wide cache lock, so concurrent
+    resolutions of the same key cost exactly one build — the §18 serve
+    engine leans on that single-flight guarantee for its warm-cache
+    metrics.
+    """
     params = dict(params or {})
+    with _CACHE_LOCK:
+        return _resolve_trace_dataset_locked(name, params)
+
+
+def _resolve_trace_dataset_locked(name: str,
+                                  params: dict) -> GraphTrace:
     if name not in _TRACE_DATASETS:
         raise KeyError(f"unknown trace dataset {name!r}; "
                        f"registered: {list(trace_dataset_names())}")
@@ -1229,9 +1294,10 @@ def clear_trace_cache() -> None:
     service holding an external reference to a trace does not keep the
     schedule memory alive through this call.
     """
-    for trace in _TRACE_CACHE.values():
-        trace.clear_schedules()
-    _TRACE_CACHE.clear()
+    with _CACHE_LOCK:
+        for trace in list(_TRACE_CACHE.values()):
+            trace.clear_schedules()
+        _TRACE_CACHE.clear()
 
 
 def _power_law_trace(*, n_nodes, n_edges, seed=0, alpha=1.6) -> GraphTrace:
